@@ -1,0 +1,59 @@
+"""IMC fabric projection + kernel-path throughput (paper §III-F made
+quantitative, plus the TPU-side exact path).
+
+Projects transformer-layer GEMMs onto a sea of 8x8 macros using the
+paper-calibrated energy/latency model, and times the exact digital-equivalent
+path (imc_matmul / Pallas kernel in interpret mode) on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core.energy import fabric_matmul_cost
+from repro.core.imc_matmul import imc_matmul
+
+
+def fabric_projection():
+    rows = []
+    cases = [
+        ("mlp_768x3072", 512, 768, 3072),  # imc-paper-110m MLP
+        ("attn_qkv_2048", 512, 2048, 2048),  # qwen2.5-3b projection
+        ("expert_ffn_qwen3moe", 512, 2048, 768),  # one expert GEMM
+    ]
+    for name, m, k, n in cases:
+        for macros in (1, 4096, 65536):
+            rep = fabric_matmul_cost(m, k, n, n_macros=macros)
+            rows.append(row(
+                f"imc_fabric/{name}/macros{macros}", rep.latency_s * 1e6,
+                f"E={rep.energy_j*1e6:.1f}uJ evals={rep.evaluations:.3g} "
+                f"TOPS/W={rep.tops_per_w:.2f}"))
+        cold = fabric_matmul_cost(m, k, n, schedule="cold")
+        rows.append(row(
+            f"imc_fabric/{name}/cold", cold.latency_s * 1e6,
+            f"paper-63ns-per-op schedule; E={cold.energy_j*1e6:.1f}uJ"))
+    return rows
+
+
+def exact_path_throughput():
+    rows = []
+    rng = np.random.default_rng(0)
+    for m, k, n in [(256, 512, 512), (512, 1024, 1024)]:
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        f = jax.jit(lambda x, w: imc_matmul(x, w, bits=8, mode="exact"))
+        us, _ = time_fn(f, x, w, iters=10)
+        flops = 2 * m * k * n
+        rows.append(row(f"imc_exact/xla_{m}x{k}x{n}", us,
+                        f"{flops/(us*1e-6)/1e9:.1f}GFLOP/s-int8-equiv"))
+        fk = jax.jit(lambda x, w: imc_matmul(x, w, bits=8, mode="exact",
+                                             use_kernel=True))
+        us_k, _ = time_fn(fk, x, w, iters=3)
+        rows.append(row(f"imc_exact/pallas_interp_{m}x{k}x{n}", us_k,
+                        "interpret=True (CPU oracle-mode, not perf)"))
+    return rows
+
+
+ALL = [fabric_projection, exact_path_throughput]

@@ -1,0 +1,48 @@
+"""Recompute roofline fields of dry-run JSONs from their stored .hlo.gz
+modules (no recompilation needed when the HLO cost model improves).
+
+Usage: PYTHONPATH=src python -m benchmarks.reanalyze [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import os
+
+from repro.launch.hlo_analysis import roofline_terms
+from repro.launch.hlo_costs import analyze
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "experiments", "dryrun"))
+    args = ap.parse_args()
+    for name in sorted(os.listdir(args.dir)):
+        if not name.endswith(".json"):
+            continue
+        stem = name[:-5]
+        hlo_path = os.path.join(args.dir, stem + ".hlo.gz")
+        if not os.path.exists(hlo_path):
+            print(f"SKIP {stem} (no stored HLO)")
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            costs = analyze(f.read())
+        jpath = os.path.join(args.dir, name)
+        rec = json.load(open(jpath))
+        mf = rec["roofline"]["model_flops_per_device"] * rec["n_devices"]
+        rl = roofline_terms(
+            {"flops": costs.flops, "bytes accessed": costs.hbm_bytes,
+             "flops_int8": costs.flops_int8},
+            dict(costs.coll_by_type), model_flops_total=mf,
+            n_devices=rec["n_devices"])
+        rec["roofline"] = rl.as_dict()
+        json.dump(rec, open(jpath, "w"), indent=1)
+        print(f"REDO {stem}: dom={rl.dominant} "
+              f"t=({rl.t_compute_s:.2e},{rl.t_memory_s:.2e},"
+              f"{rl.t_collective_s:.2e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Roofline report: aggregate dry-run JSONs into the EXPERIMENTS.md table.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+Prints a markdown table of compute/memory/collective terms per cell and the
+dominant bottleneck; also emits CSV rows for benchmarks.run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun")
+
+
+def load(dir_=DEFAULT_DIR):
+    recs = []
+    if not os.path.isdir(dir_):
+        return recs
+    for name in sorted(os.listdir(dir_)):
+        if name.endswith(".json"):
+            with open(os.path.join(dir_, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def fraction_of_roofline(rec):
+    """max(term)/sum-ish quality: useful-FLOPs time over the bound.
+
+    We report: bound = max(t_compute, t_memory, t_collective); the 'roofline
+    fraction' = t_model_compute / bound, where t_model_compute uses the
+    analytic 6*N*D model FLOPs (what a perfect implementation would need).
+    """
+    r = rec["roofline"]
+    bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+    t_model = r["model_flops_per_device"] / 197e12
+    return (t_model / bound) if bound > 0 else 0.0
+
+
+def markdown_table(recs):
+    lines = [
+        "| arch | shape | mesh | variant | GiB/dev | t_comp | t_mem | t_coll "
+        "| dominant | useful/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        r = rec["roofline"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {rec.get('variant', 'baseline')} "
+            f"| {rec['memory']['peak_per_device_gb']:.2f} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {fraction_of_roofline(rec):.3f} |")
+    return "\n".join(lines)
+
+
+def csv_rows(recs):
+    rows = []
+    for rec in recs:
+        r = rec["roofline"]
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append(
+            f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']},"
+            f"{bound*1e6:.1f},"
+            f"dom={r['dominant']} frac={fraction_of_roofline(rec):.3f} "
+            f"mem={rec['memory']['peak_per_device_gb']:.2f}GiB")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEFAULT_DIR)
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if not recs:
+        print("no dry-run records found; run repro.launch.dryrun first")
+        return
+    print(markdown_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Benchmark runner: one function per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline rows appear when dry-run
+records exist under experiments/dryrun/.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import bench_imc_throughput, bench_paper_tables, roofline
+
+    print("name,us_per_call,derived")
+    for fn in bench_paper_tables.ALL:
+        for r in fn():
+            print(r, flush=True)
+    for fn in bench_imc_throughput.ALL:
+        for r in fn():
+            print(r, flush=True)
+    for r in roofline.csv_rows(roofline.load()):
+        print(r, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""End-to-end driver: train the ~110M-parameter paper-demonstrator LM for a
+few hundred steps with EVERY projection running through the IMC fabric's
+exact digital-equivalent path (int8 bit-plane MAC), fault-tolerant loop +
+checkpointing included.
+
+Run:  PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+(--small trains a width-reduced variant in seconds; default is the full 110M.)
+"""
+import argparse
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true",
+                    help="width-reduced variant (CI-speed)")
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config("imc-paper-110m")
+    if args.small:
+        cfg = reduce_config(cfg)
+    batch = args.batch or (8 if args.small else 4)
+    seq = args.seq or (64 if args.small else 512)
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        (params, _), hist = train(cfg, steps=args.steps, global_batch=batch,
+                                  seq_len=seq, ckpt_root=ckpt,
+                                  ckpt_every=max(args.steps // 4, 1),
+                                  lr=1e-3)
+    losses = [m["loss"] for m in hist]
+    n = sum(np.asarray(x).size for x in jax.tree.leaves(params))
+    print(f"params: {n/1e6:.1f}M  (imc_mode={cfg.imc_mode}, "
+          f"{cfg.imc_bits}-bit fabric)")
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"over {args.steps} steps")
+    assert losses[-1] < losses[0], "training must reduce loss"
+    print("train_tiny_lm OK")
+
+
+if __name__ == "__main__":
+    main()

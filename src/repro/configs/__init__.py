@@ -1,0 +1,9 @@
+from repro.configs.base import (SHAPES, LONG_CONTEXT_ARCHS, ModelConfig,
+                                ShapeConfig, get_config, list_configs,
+                                reduce_config, register)
+
+ASSIGNED_ARCHS = (
+    "musicgen-large", "qwen2-72b", "deepseek-coder-33b", "qwen2.5-3b",
+    "gemma3-12b", "dbrx-132b", "qwen3-moe-30b-a3b", "recurrentgemma-9b",
+    "llava-next-mistral-7b", "mamba2-370m",
+)

@@ -1,0 +1,99 @@
+"""Behavioral model of the 8x8 (RxC) 8T SRAM IMC array.
+
+Functional-state design: the array contents are a plain ``uint8[rows, cols]``
+jnp array (node Q of each cell); all operations are pure functions, so the
+model is jit/vmap/scan friendly and batches across a "sea of macros".
+
+Operations mirror the paper's peripheral circuitry:
+  * ``write_row``   — write driver + row decoder (one row per write cycle)
+  * ``read_bit``    — normal memory read through the decoupled read port
+                      (single RWL active; count in {0,1} IS the stored bit —
+                      no read disturbance, the 8T advantage)
+  * ``mac``         — multi-row evaluation: pre-charge, assert RWL pattern,
+                      charge-share, comparator decode (full analog path)
+  * ``logic2``      — two-row evaluation interpreted as AND/OR/XOR/... per
+                      column (8 columns -> bitwise 8-bit logic, Table II)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import constants as C
+from repro.core.decoder import code_to_count, thermometer_code
+from repro.core.energy import mac_energy_fj
+from repro.core.logic import logic_from_count
+from repro.core.rbl import rbl_voltage
+
+
+@dataclass(frozen=True)
+class ArraySpec:
+    rows: int = C.ROWS
+    cols: int = C.COLS
+    mode: str = "lut"  # "lut" (canonical 8x8) | "physics" (any geometry)
+    t_eval: float = C.T_EVAL_S
+
+    def __post_init__(self):
+        if self.mode == "lut" and self.rows != C.ROWS:
+            raise ValueError("lut mode requires 8 rows")
+
+
+class MacResult(NamedTuple):
+    counts: jnp.ndarray  # int32[cols]   decoded MAC counts
+    volts: jnp.ndarray  # float32[cols] analog RBL voltages
+    codes: jnp.ndarray  # uint8[cols, rows] thermometer codes
+    energy_fj: jnp.ndarray  # float32[cols] per-column RBL energy (Table III model)
+
+
+def empty_state(spec: ArraySpec = ArraySpec()):
+    return jnp.zeros((spec.rows, spec.cols), jnp.uint8)
+
+
+def write_row(state, row, bits):
+    """One write cycle: drive BL/BLbar on ``row`` with ``bits`` (uint8[cols])."""
+    return state.at[row].set(jnp.asarray(bits, jnp.uint8))
+
+
+def write(state, bits):
+    """Load a full operand matrix (rows x cols) over ``rows`` write cycles."""
+    return jnp.asarray(bits, jnp.uint8).reshape(state.shape)
+
+
+def mac(state, rwl, spec: ArraySpec = ArraySpec(), *, k_noise=None,
+        comparator_offset_sigma=None, key=None) -> MacResult:
+    """Full analog MAC path for one evaluation.
+
+    ``rwl``: uint8[rows] word-line activation pattern (operand A bits).
+    ``k_noise``: optional float[cols] additive mismatch on the effective count
+    (from :mod:`repro.core.montecarlo`).
+    """
+    rwl = jnp.asarray(rwl, jnp.int32)
+    k = rwl @ state.astype(jnp.int32)  # int[cols]: true MAC counts
+    k_eff = k.astype(jnp.float32)
+    if k_noise is not None:
+        k_eff = k_eff + k_noise
+    v = rbl_voltage(k_eff, rows=spec.rows, t_eval=spec.t_eval, mode=spec.mode)
+    codes = thermometer_code(v, rows=spec.rows, mode=spec.mode,
+                             t_eval=spec.t_eval,
+                             comparator_offset_sigma=comparator_offset_sigma,
+                             key=key)
+    counts = code_to_count(codes)
+    return MacResult(counts, v, codes, mac_energy_fj(counts))
+
+
+def read_bit(state, row, spec: ArraySpec = ArraySpec()):
+    """Normal SRAM read via the read port: count of a single-RWL evaluation."""
+    rwl = jnp.zeros((spec.rows,), jnp.uint8).at[row].set(1)
+    return mac(state, rwl, spec).counts.astype(jnp.uint8)
+
+
+def logic2(state, row_a, row_b, spec: ArraySpec = ArraySpec(), **noise):
+    """Two-row evaluation -> all MAC-derived logic ops, bitwise per column.
+
+    Returns (dict op->uint8[cols], MacResult).
+    """
+    rwl = jnp.zeros((spec.rows,), jnp.uint8).at[row_a].set(1).at[row_b].set(1)
+    res = mac(state, rwl, spec, **noise)
+    return logic_from_count(res.counts, m=2), res

@@ -1,0 +1,108 @@
+"""Bit-serial N-bit MAC over the IMC fabric (the paper's "M parallel N-bit MAC").
+
+A multi-bit dot product decomposes into binary (bit-plane) dot products:
+
+    a . w = sum_{p,q} 2^{p+q} sum_k a_k[p] * w_k[q]
+
+The inner binary sum is exactly what the SRAM macro computes: K is tiled into
+groups of ``rows`` (8), each group's popcount is a MAC count in [0, rows]
+digitized by the comparator decoder, and groups/planes are shift-accumulated
+digitally.  Two paths:
+
+  * exact  — decode is the identity on [0, rows]; group sums telescope back to
+             a plain integer matmul (used to prove digital equivalence).
+  * sim    — per-group counts go through the analog path (voltage model ->
+             thermometer decode), optionally with mismatch noise; this is the
+             hardware-faithful emulation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import constants as C
+from repro.core.decoder import decode_voltage
+from repro.core.montecarlo import mc_count_noise
+from repro.core.rbl import rbl_voltage
+
+
+def _pad_to_groups(x, axis, rows):
+    k = x.shape[axis]
+    pad = (-k) % rows
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x
+
+
+def group_counts(a_bits, w_bits, rows: int = C.ROWS):
+    """Per-group binary MAC counts.
+
+    a_bits: uint8[..., K] RWL activation bits; w_bits: uint8[K, N] stored bits.
+    Returns int32[..., G, N] counts with G = ceil(K/rows).
+    """
+    a = _pad_to_groups(a_bits.astype(jnp.int32), -1, rows)
+    w = _pad_to_groups(w_bits.astype(jnp.int32), 0, rows)
+    g = a.shape[-1] // rows
+    a = a.reshape(a.shape[:-1] + (g, rows))
+    w = w.reshape((g, rows) + w.shape[1:])
+    # counts[..., g, n] = sum_r a[..., g, r] * w[g, r, n]
+    return jnp.einsum("...gr,grn->...gn", a, w)
+
+
+def decode_group_counts(counts, *, mode: str = "exact", rows: int = C.ROWS,
+                        key=None, mismatch: bool = False,
+                        comparator_offset_sigma=None, rbl_mode: str = "lut"):
+    """Pass group counts through the (modeled) analog decode path.
+
+    mode="exact": identity (clipped) — the digital equivalent.
+    mode="sim":   counts -> k_eff (+ mismatch) -> V_RBL -> comparators -> counts.
+    """
+    if mode == "exact":
+        return jnp.clip(counts, 0, rows)
+    if mode != "sim":
+        raise ValueError(mode)
+    k_eff = counts.astype(jnp.float32)
+    ckey = None
+    if mismatch or comparator_offset_sigma is not None:
+        if key is None:
+            raise ValueError("sim with noise requires a PRNG key")
+    if mismatch:
+        import jax
+        key, nkey = jax.random.split(key)
+        k_eff = k_eff + mc_count_noise(nkey, counts.shape, counts)
+        ckey = key
+    elif comparator_offset_sigma is not None:
+        ckey = key
+    v = rbl_voltage(k_eff, rows=rows, mode=rbl_mode)
+    return decode_voltage(v, rows=rows, mode=rbl_mode,
+                          comparator_offset_sigma=comparator_offset_sigma,
+                          key=ckey)
+
+
+def bitserial_matmul_unsigned(u_a, u_w, *, bits_a: int = 8, bits_w: int = 8,
+                              rows: int = C.ROWS, mode: str = "exact",
+                              **decode_kw):
+    """Unsigned bit-serial matmul via per-group decoded MAC counts.
+
+    u_a: int32[..., K] in [0, 2^bits_a); u_w: int32[K, N) likewise.
+    Returns int32[..., N] == u_a @ u_w when mode="exact".
+    """
+    from repro.core.quant import to_bitplanes
+
+    import jax
+
+    a_planes = to_bitplanes(u_a, bits_a)  # [PA, ..., K]
+    w_planes = to_bitplanes(u_w, bits_w)  # [PW, K, N]
+    base_key = decode_kw.pop("key", None)
+    out = None
+    for p in range(bits_a):
+        for q in range(bits_w):
+            kw = dict(decode_kw)
+            if base_key is not None:
+                kw["key"] = jax.random.fold_in(base_key, p * bits_w + q)
+            counts = group_counts(a_planes[p], w_planes[q], rows)
+            dec = decode_group_counts(counts, rows=rows, mode=mode, **kw)
+            part = jnp.sum(dec, axis=-2) << (p + q)  # sum over groups, shift
+            out = part if out is None else out + part
+    return out

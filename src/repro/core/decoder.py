@@ -1,0 +1,61 @@
+"""MAC decoder: comparator bank -> thermometer code -> digital MAC count.
+
+The paper's decoder (Fig 3/4) uses one comparator per MAC level; thresholds sit
+between adjacent RBL levels.  Comparator i outputs 1 while V_RBL is ABOVE its
+threshold, so count k produces the thermometer codes of Table I
+(k=0 -> 11111111, k=8 -> 00000000) and ``count = rows - popcount(code)``.
+
+``comparator_offset_sigma`` models input-referred comparator offset (the paper
+notes 100-250 mV level spacing >> comparator noise; we expose it for
+sensitivity studies and Monte-Carlo).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants as C
+from repro.core.rbl import level_voltages
+
+
+def thresholds(rows: int = C.ROWS, *, mode: str = "lut",
+               t_eval: float = C.T_EVAL_S):
+    """Comparator references: midpoints between adjacent count levels.
+
+    Returned descending: thr[i] separates count i (above) from i+1 (below).
+    """
+    lv = level_voltages(rows, mode=mode, t_eval=t_eval)
+    return 0.5 * (lv[:-1] + lv[1:])
+
+
+def thermometer_code(v_rbl, *, rows: int = C.ROWS, mode: str = "lut",
+                     t_eval: float = C.T_EVAL_S, comparator_offset_sigma=None,
+                     key=None):
+    """Comparator bank output: uint8 bits, bit i = (V_RBL > thr[i]).
+
+    Shape: v_rbl.shape + (rows,).
+    """
+    thr = thresholds(rows, mode=mode, t_eval=t_eval)
+    v = jnp.asarray(v_rbl, jnp.float32)[..., None]
+    if comparator_offset_sigma is not None:
+        if key is None:
+            raise ValueError("comparator noise requires a PRNG key")
+        thr = thr + comparator_offset_sigma * jax.random.normal(
+            key, v.shape[:-1] + (rows,), jnp.float32)
+    return (v > thr).astype(jnp.uint8)
+
+
+def code_to_count(code):
+    """Thermometer code -> MAC count: rows - popcount(code)."""
+    code = jnp.asarray(code)
+    return code.shape[-1] - jnp.sum(code.astype(jnp.int32), axis=-1)
+
+
+def decode_voltage(v_rbl, *, rows: int = C.ROWS, mode: str = "lut",
+                   t_eval: float = C.T_EVAL_S, comparator_offset_sigma=None,
+                   key=None):
+    """Full analog-to-digital decode: V_RBL -> MAC count (int32)."""
+    code = thermometer_code(v_rbl, rows=rows, mode=mode, t_eval=t_eval,
+                            comparator_offset_sigma=comparator_offset_sigma,
+                            key=key)
+    return code_to_count(code)

@@ -1,0 +1,65 @@
+"""ImcLinear — a Linear layer executed on the (modeled) IMC fabric.
+
+Drop-in replacement for a dense projection inside the model zoo.  Forward:
+dynamic int8 activation quant + static-scale int8 weights + integer GEMM
+(exact IMC-equivalent path; Pallas kernel on TPU), dequant, optional bias.
+
+Backward: straight-through estimator — gradients flow as if the layer were the
+underlying float matmul (standard QAT practice), so the same module is usable
+in training AND serving.  ``mode="sim"`` additionally pushes the forward
+through the analog decode path (group-wise, with optional noise) for
+hardware-in-the-loop robustness studies.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.imc_matmul import imc_matmul
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def imc_linear_apply(x, w, b, bits: int = 8, mode: str = "exact",
+                     use_kernel: bool = False):
+    y = imc_matmul(x, w, bits=bits, mode=mode, use_kernel=use_kernel)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def _fwd(x, w, b, bits, mode, use_kernel):
+    return imc_linear_apply(x, w, b, bits, mode, use_kernel), (x, w, b is None)
+
+
+def _bwd(bits, mode, use_kernel, res, g):
+    x, w, no_bias = res
+    g = g.astype(jnp.float32)
+    dx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
+    dw = jnp.einsum("...k,...n->kn",
+                    x.reshape(-1, x.shape[-1]).astype(jnp.float32),
+                    g.reshape(-1, g.shape[-1])).astype(w.dtype)
+    db = None if no_bias else jnp.sum(
+        g.reshape(-1, g.shape[-1]), axis=0).astype(g.dtype)
+    return dx, dw, db
+
+
+imc_linear_apply.defvjp(_fwd, _bwd)
+
+
+def init_imc_linear(key, d_in: int, d_out: int, *, use_bias: bool = False,
+                    dtype=jnp.float32, scale: float | None = None):
+    """He-style init; params pytree compatible with models/ layers."""
+    s = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+    p = {"w": w}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def apply_imc_linear(params, x, *, bits: int = 8, mode: str = "exact",
+                     use_kernel: bool = False):
+    b = params.get("b")
+    return imc_linear_apply(x, params["w"], b, bits, mode, use_kernel)

@@ -1,0 +1,87 @@
+"""High-level IMC matmul: quantize -> bit-serial MAC on the fabric -> dequant.
+
+This is the paper's technique packaged as a drop-in GEMM:
+
+  * mode="exact"  — digital equivalent of the IMC fabric (decode is exact for
+                    every group, so group sums telescope): an int8 x int8
+                    integer matmul with per-channel dequant.  This is the fast
+                    path; on TPU it runs as a Pallas MXU kernel
+                    (:mod:`repro.kernels.imc_mac`).
+  * mode="sim"    — hardware-faithful emulation: offset-binary bit-planes,
+                    per-8-row-group charge-sharing voltage, comparator
+                    thermometer decode, optional device mismatch + comparator
+                    offset noise (:mod:`repro.kernels.rbl_decode` is the
+                    kernelized version of the inner loop).
+
+Both return float outputs plus an optional hardware cost report
+(:class:`repro.core.energy.FabricReport`).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants as C
+from repro.core.bitserial import bitserial_matmul_unsigned
+from repro.core.energy import FabricReport, fabric_matmul_cost
+from repro.core.quant import Quantized, quantize, signed_product_correction, to_offset_binary
+
+
+def int_matmul(qa, qw):
+    """int8 x int8 -> int32 matmul (MXU-native on TPU)."""
+    return jax.lax.dot_general(
+        qa.astype(jnp.int8), qw.astype(jnp.int8),
+        (((qa.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("bits", "mode", "rows", "mismatch",
+                                   "use_kernel"))
+def imc_matmul(x, w, *, bits: int = 8, mode: str = "exact",
+               rows: int = C.ROWS, key=None, mismatch: bool = False,
+               comparator_offset_sigma=None, use_kernel: bool = False):
+    """IMC GEMM: y[..., N] ~= x[..., K] @ w[K, N] through the 8T SRAM fabric.
+
+    Activations are quantized per-tensor (dynamic), weights per-output-channel.
+    """
+    qx = quantize(x, bits, axis=None)
+    qw = quantize(w, bits, axis=0)  # per-column (output channel) scales
+    if mode == "exact":
+        if use_kernel:
+            from repro.kernels.imc_mac.ops import imc_mac
+
+            acc = imc_mac(qx.q, qw.q)
+        else:
+            acc = int_matmul(qx.q, qw.q)
+    elif mode == "sim":
+        u_a = to_offset_binary(qx.q, bits)
+        u_w = to_offset_binary(qw.q, bits)
+        uu = bitserial_matmul_unsigned(
+            u_a, u_w, bits_a=bits, bits_w=bits, rows=rows, mode="sim",
+            key=key, mismatch=mismatch,
+            comparator_offset_sigma=comparator_offset_sigma)
+        acc = uu - signed_product_correction(u_a, u_w, bits)
+    else:
+        raise ValueError(mode)
+    return acc.astype(jnp.float32) * qx.scale * qw.scale.reshape(
+        (1,) * (acc.ndim - 1) + (-1,))
+
+
+def imc_matmul_cost(x_shape, w_shape, *, bits: int = 8, rows: int = C.ROWS,
+                    cols: int = C.COLS, n_macros: int = 1,
+                    schedule: str = "weight_stationary") -> FabricReport:
+    """Hardware cost projection for an imc_matmul call (energy/latency model)."""
+    *batch, k = x_shape
+    m = 1
+    for b in batch:
+        m *= b
+    n = w_shape[-1]
+    return fabric_matmul_cost(m, k, n, bits_a=bits, bits_w=bits, rows=rows,
+                              cols=cols, n_macros=n_macros, schedule=schedule)
+
+
+def quantize_weight(w, bits: int = 8) -> Quantized:
+    """Static (load-time) weight quantization for ImcLinear."""
+    return quantize(w, bits, axis=0)

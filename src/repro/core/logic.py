@@ -1,0 +1,46 @@
+"""MAC-derived logic: interpret Boolean functions from the decoded MAC count.
+
+Paper §III-B..E: with m rows activated, a single MAC evaluation yields
+    AND  = (count == m)          NAND = !AND
+    OR   = (count > 0)           NOR  = !OR
+    XOR  = parity(count)         XNOR = !XOR     (m=2: count==1, as Table II)
+    SUM  = XOR, CARRY = AND      (1-bit addition, m=2)
+simultaneously, with no additional logic circuitry.  8 columns evaluated in
+parallel give bitwise 8-bit operations.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+OPS = ("AND", "NAND", "OR", "NOR", "XOR", "XNOR", "SUM", "CARRY")
+
+
+def logic_from_count(count, m: int = 2):
+    """All MAC-derived logic outputs for an m-operand evaluation.
+
+    ``count``: int array of decoded MAC counts (any shape).
+    Returns dict of uint8 arrays of the same shape.
+    """
+    count = jnp.asarray(count, jnp.int32)
+    and_ = (count == m).astype(jnp.uint8)
+    or_ = (count > 0).astype(jnp.uint8)
+    xor = (count % 2).astype(jnp.uint8)  # == (count==1) for m=2 (Table II)
+    return {
+        "AND": and_, "NAND": 1 - and_,
+        "OR": or_, "NOR": 1 - or_,
+        "XOR": xor, "XNOR": 1 - xor,
+        "SUM": xor, "CARRY": and_,
+    }
+
+
+def add_1bit(count):
+    """1-bit full-adder outputs from a 2-row MAC evaluation (paper §III-E)."""
+    out = logic_from_count(count, m=2)
+    return out["SUM"], out["CARRY"]
+
+
+def truth_table_counts():
+    """MAC counts for the four 2-operand input patterns (Table II rows)."""
+    a = jnp.array([0, 0, 1, 1], jnp.int32)
+    b = jnp.array([0, 1, 0, 1], jnp.int32)
+    return a + b  # for 1-bit operands, count = A + B

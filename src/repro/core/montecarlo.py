@@ -1,0 +1,56 @@
+"""Monte-Carlo device-mismatch model (paper Fig 6).
+
+The paper's MC run (200 samples, MAC count 8) reports mean 437 fJ and sigma
+48.72 fJ — random device mismatch during sensing.  We model per-discharge-path
+charge mismatch: the energy of a count-k evaluation is
+
+    E = E(0) + sum_{i=1..k} g_i * dE_i,     dE_i = E(i) - E(i-1) (Table III),
+    g_i ~ N(MU_G, SIGMA_G)  iid per path,
+
+with (MU_G, SIGMA_G) calibrated in closed form to the paper's (mean, sigma)
+(see :mod:`repro.core.constants`).  The same g_i mismatch perturbs the
+effective count seen by the decoder (k_eff = sum g_i), which is how decode
+errors enter the analog-sim matmul path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants as C
+
+
+def sample_path_gains(key, shape, *, sigma_g: float | None = None,
+                      mu_g: float | None = None):
+    """Per-discharge-path gain factors g ~ N(mu, sigma), clipped at 0."""
+    sigma = C.MC_SIGMA_G if sigma_g is None else sigma_g
+    mu = C.MC_MU_G if mu_g is None else mu_g
+    return jnp.maximum(mu + sigma * jax.random.normal(key, shape), 0.0)
+
+
+def mc_energy_fj(key, k: int, n_samples: int = C.MC_SAMPLES, **kw):
+    """MC energy samples (fJ) for an evaluation with true count ``k``."""
+    de = jnp.asarray(C.E_MAC_TABLE_FJ[1:] - C.E_MAC_TABLE_FJ[:-1], jnp.float32)
+    g = sample_path_gains(key, (n_samples, k), **kw)
+    return C.E_MAC_TABLE_FJ[0] + g @ de[:k]
+
+
+def mc_count_noise(key, shape, k, *, sigma_vk: float | None = None):
+    """Voltage-referred mismatch as additive noise on the effective count.
+
+    ``k`` is the true count array (broadcast against ``shape``); noise stddev
+    scales with sqrt(k) (independent per-path contributions).  Uses
+    ``MC_SIGMA_VK`` — the small, margin-preserving voltage projection of
+    mismatch (the paper's decode stays correct across MC/corners), NOT the
+    energy-referred ``MC_SIGMA_G``.
+    """
+    k = jnp.asarray(k, jnp.float32)
+    sigma = C.MC_SIGMA_VK if sigma_vk is None else sigma_vk
+    z = jax.random.normal(key, shape)
+    return sigma * jnp.sqrt(jnp.maximum(k, 0.0)) * z
+
+
+def mc_stats(key, k: int = C.ROWS, n_samples: int = C.MC_SAMPLES, **kw):
+    """(mean, std) of the MC energy distribution — Fig 6 reproduction."""
+    e = mc_energy_fj(key, k, n_samples, **kw)
+    return jnp.mean(e), jnp.std(e)

@@ -1,0 +1,70 @@
+"""Quantization utilities for the bit-serial IMC MAC.
+
+Symmetric linear quantization to signed ``bits``-wide integers in
+[-(2^{b-1}-1), 2^{b-1}-1] (symmetric range avoids the -128 asymmetry), with
+per-tensor (activations, dynamic) or per-channel (weights) scales.
+
+Bit-plane view: the SRAM array stores/streams {0,1} bits, so signed operands
+use offset-binary u = q + 2^{b-1} in [1, 2^b - 1], and the signed product is
+recovered with rank-1 corrections:
+
+  q_a . q_w = u_a . u_w - o * sum(u_w) - o * sum(u_a) + K * o^2,   o = 2^{b-1}
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class Quantized(NamedTuple):
+    q: jnp.ndarray  # int8/int32 signed quantized values
+    scale: jnp.ndarray  # broadcastable scale: x ~= q * scale
+
+
+def quantize(x, bits: int = 8, axis=None, eps: float = 1e-8) -> Quantized:
+    """Symmetric quantization; ``axis`` = reduction axes for the scale
+    (None -> per-tensor). Keeps dims for broadcastable scales."""
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, eps) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return Quantized(q, scale.astype(jnp.float32))
+
+
+def dequantize(qx: Quantized):
+    return qx.q.astype(jnp.float32) * qx.scale
+
+
+def to_offset_binary(q, bits: int = 8):
+    """Signed q -> unsigned offset-binary u = q + 2^{b-1} (int32)."""
+    return q.astype(jnp.int32) + (1 << (bits - 1))
+
+
+def to_bitplanes(u, bits: int = 8):
+    """Unsigned u -> stacked {0,1} planes, LSB first: uint8[bits, ...]."""
+    u = u.astype(jnp.int32)
+    shifts = jnp.arange(bits, dtype=jnp.int32).reshape((bits,) + (1,) * u.ndim)
+    return ((u[None] >> shifts) & 1).astype(jnp.uint8)
+
+
+def from_bitplanes(planes):
+    """Inverse of :func:`to_bitplanes`."""
+    bits = planes.shape[0]
+    w = (1 << jnp.arange(bits, dtype=jnp.int32)).reshape(
+        (bits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) * w, axis=0)
+
+
+def signed_product_correction(u_a, u_w, bits: int = 8):
+    """Rank-1 correction terms so that q_a.q_w is recovered from u_a.u_w.
+
+    ``u_a``: int32[..., K] offset-binary activations, ``u_w``: int32[K, N].
+    Returns (corr, ) to be SUBTRACTED from the unsigned matmul: a (..., N)
+    array equal to  o*sum_k u_w[k,n] + o*sum_k u_a[...,k] - K*o^2.
+    """
+    o = 1 << (bits - 1)
+    k_dim = u_w.shape[0]
+    col = jnp.sum(u_w, axis=0)  # [N]
+    row = jnp.sum(u_a, axis=-1, keepdims=True)  # [..., 1]
+    return o * col + o * row - k_dim * o * o

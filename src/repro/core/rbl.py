@@ -1,0 +1,69 @@
+"""Read-bit-line (RBL) charge-sharing discharge model.
+
+The paper's MAC primitive: k active cells (stored bit AND RWL both 1) each open
+a discharge path from the pre-charged RBL. After the 0.7 ns evaluation window
+the RBL voltage is a monotone-decreasing function of k (Table I).
+
+Two interchangeable models:
+  * ``mode="lut"``     — exact Table I values (canonical, 8 rows only), with
+                         piecewise-linear interpolation for fractional
+                         "effective k" (Monte-Carlo mismatch).
+  * ``mode="physics"`` — two-regime discharge fitted to Table I (rmse 12.4 mV):
+                         constant-current (velocity-saturated read stack) drop
+                         of ``U_LIN`` volts per active cell while V > VD_SAT,
+                         then exponential (triode/RC) decay.  Extrapolates to
+                         any row count / eval window (paper §III-F: larger
+                         arrays scale C_RBL, shrinking the per-cell drop).
+
+Everything is jnp-traceable and vmap-safe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import constants as C
+
+
+def rbl_voltage_physics(k, *, rows: int = C.ROWS, t_eval: float = C.T_EVAL_S):
+    """Two-regime discharge model. ``k`` may be fractional (mismatch models).
+
+    Scaling (paper §III-F): the effective bit-line capacitance grows with the
+    number of rows, so the per-cell linear drop scales as (8/rows); the eval
+    window scales the drop budget linearly (small-signal).
+    """
+    k = jnp.asarray(k, jnp.float32)
+    u = C.U_LIN * (C.ROWS / rows) * (t_eval / C.T_EVAL_S)
+    x = k * u  # total discharge "budget" in volts
+    lin = C.V0_LEAK - x
+    x_tri = jnp.maximum(x - (C.V0_LEAK - C.VD_SAT), 0.0)
+    tri = C.VD_SAT * jnp.exp(-x_tri / C.VD_SAT)
+    return jnp.where(lin >= C.VD_SAT, lin, tri)
+
+
+def rbl_voltage_lut(k):
+    """Exact Table I voltages; piecewise-linear in fractional k, clipped to [0,8]."""
+    k = jnp.clip(jnp.asarray(k, jnp.float32), 0.0, float(C.ROWS))
+    lut = jnp.asarray(C.V_RBL_TABLE, jnp.float32)
+    lo = jnp.clip(jnp.floor(k).astype(jnp.int32), 0, C.ROWS - 1)
+    frac = k - lo.astype(jnp.float32)
+    return lut[lo] * (1.0 - frac) + lut[lo + 1] * frac
+
+
+def rbl_voltage(k, *, rows: int = C.ROWS, t_eval: float = C.T_EVAL_S,
+                mode: str = "lut"):
+    """RBL voltage after evaluation for MAC count ``k`` (broadcasting)."""
+    if mode == "lut":
+        if rows != C.ROWS or t_eval != C.T_EVAL_S:
+            raise ValueError("LUT mode is calibrated for 8 rows / 0.7 ns; "
+                             "use mode='physics' for other geometries")
+        return rbl_voltage_lut(k)
+    if mode == "physics":
+        return rbl_voltage_physics(k, rows=rows, t_eval=t_eval)
+    raise ValueError(f"unknown rbl mode: {mode!r}")
+
+
+def level_voltages(rows: int = C.ROWS, *, mode: str = "lut",
+                   t_eval: float = C.T_EVAL_S):
+    """Voltages for every possible count 0..rows (decoder calibration)."""
+    ks = jnp.arange(rows + 1, dtype=jnp.float32)
+    return rbl_voltage(ks, rows=rows, t_eval=t_eval, mode=mode)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash_attn kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, scale: float, window: int = 0):
+    """q/k/v: (BH, S, hd); causal (optionally windowed) self-attention."""
+    s = q.shape[1]
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = kp <= qp
+    if window:
+        mask &= kp > qp - window
+    logits = jnp.where(mask[None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the imc_mac kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def imc_mac_ref(qa, qw):
+    """int8[M,K] x int8[K,N] -> int32[M,N]."""
+    return jax.lax.dot_general(
+        qa.astype(jnp.int8), qw.astype(jnp.int8),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def imc_mac_dequant_ref(qa, qw, scale_a, scale_w):
+    acc = imc_mac_ref(qa, qw).astype(jnp.float32)
+    return acc * jnp.asarray(scale_a, jnp.float32) * jnp.asarray(
+        scale_w, jnp.float32)[None, :]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the rbl_decode kernel (built on repro.core)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import constants as C
+from repro.core.bitserial import group_counts
+from repro.core.decoder import decode_voltage
+from repro.core.rbl import rbl_voltage
+
+
+def rbl_decode_mac_ref(a_bits, w_bits, *, rows: int = C.ROWS,
+                       mode: str = "physics"):
+    """sum_g decode(V(count_g)) using the core reference path."""
+    counts = group_counts(a_bits, w_bits, rows)  # [..., G, N]
+    v = rbl_voltage(counts.astype(jnp.float32), rows=rows, mode=mode)
+    dec = decode_voltage(v, rows=rows, mode=mode)
+    return jnp.sum(dec, axis=-2).astype(jnp.int32)

@@ -1,0 +1,115 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting + roofline terms.
+
+The compiled module is the per-device program, so every byte count extracted
+here is per-chip; roofline terms divide by per-chip peak rates directly.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict
+
+from repro.core.constants import TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"%?([\w.\-]+)\s*=\s*(\(?[\w\[\],\s]+\)?)\s*([\w\-]+)\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string like 'bf16[16,4096,512]{2,1,0}'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-type operand bytes of every collective in the module.
+
+    Operand shapes are resolved through a symbol table (name -> result shape)
+    built from every instruction definition in the module.
+    """
+    symbols: Dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\()?[\w]+\[[^=]*?)\s+[\w\-]+", ln)
+        if m:
+            symbols[m.group(1)] = m.group(2)
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    for ln in lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[\w\[\],{}\s]+?\)?)\s+([\w\-]+)(?:\.\d+)?\(([^)]*)\)", ln)
+        if not m:
+            continue
+        result_shape, opname, operands = m.groups()
+        base = opname
+        if base.endswith("-start") or base.endswith("-done"):
+            base = base.rsplit("-", 1)[0]
+        if base not in COLLECTIVE_OPS:
+            continue
+        if opname.endswith("-done"):
+            continue  # counted at -start
+        nbytes = 0
+        for token in operands.split(","):
+            token = token.strip().lstrip("%")
+            if token in symbols:
+                nbytes += shape_bytes(symbols[token])
+        if nbytes == 0:  # fall back to result size
+            nbytes = shape_bytes(result_shape)
+        out[base] += nbytes
+        counts[base] += 1
+    out["_counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    t_compute_s: float
+    t_memory_s: float
+    t_collective_s: float
+    dominant: str
+    model_flops_per_device: float = 0.0
+    useful_flops_ratio: float = 0.0
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(cost: dict, coll: Dict[str, int], *,
+                   model_flops_total: float = 0.0,
+                   n_devices: int = 1) -> Roofline:
+    """Three roofline terms from per-device costs + collective bytes.
+
+    int8 dots (cost key "flops_int8") run at 2x MXU throughput on v5e."""
+    flops = float(cost.get("flops", 0.0))
+    f_i8 = float(cost.get("flops_int8", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(sum(v for k, v in coll.items() if not k.startswith("_")))
+    t_c = (flops - f_i8) / TPU_PEAK_FLOPS_BF16 \
+        + f_i8 / (2 * TPU_PEAK_FLOPS_BF16)
+    t_m = byts / TPU_HBM_BW
+    t_x = cbytes / TPU_ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_total / max(n_devices, 1)
+    return Roofline(flops, byts, cbytes, t_c, t_m, t_x, dom, mf,
+                    (mf / flops) if flops else 0.0)

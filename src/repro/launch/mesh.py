@@ -1,0 +1,42 @@
+"""Production mesh builders.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+
+Production topology (TPU v5e):
+  single-pod: 16 x 16 = 256 chips, axes ("data", "model")
+  multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model")
+The "pod" axis carries pure DP (hierarchical gradient all-reduce over the
+slower cross-pod links); ZeRO/FSDP sharding stays intra-pod on "data".
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None, model_parallel: int = 2):
+    """Small mesh over whatever devices exist (unit tests)."""
+    n = n_devices or len(jax.devices())
+    mp = model_parallel if n % model_parallel == 0 else 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh) -> str:
+    return "model"
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n

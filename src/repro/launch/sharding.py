@@ -1,0 +1,185 @@
+"""Sharding rules: params (TP + intra-pod FSDP/ZeRO), optimizer, batch, cache.
+
+Policy (see DESIGN.md §3.2):
+  * TP over "model": attention heads, MLP/expert d_ff, experts, vocab.
+  * FSDP/ZeRO over "data" (intra-pod only): the other large dim of every 2D+
+    weight; optimizer masters/moments inherit the same specs.
+  * "pod" axis: pure DP (replicated params, hierarchical grad all-reduce).
+  * batch over ("pod","data"); decode KV-cache seq over "model"
+    (flash-decode-style sharded softmax); long_500k (batch=1) shards cache
+    seq over every axis.
+  * every rule is divisibility-guarded: a non-divisible dim falls back to
+    replication on that axis (correctness never depends on the spec).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import dp_axes, dp_size
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _guard(mesh, shape, spec):
+    """Drop axes whose extent does not divide the dim."""
+    fixed = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        fixed.append(axis if dim % _axis_size(mesh, axis) == 0 else None)
+    return P(*fixed)
+
+
+def _ns(mesh, shape, *spec):
+    return NamedSharding(mesh, _guard(mesh, shape, spec))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+# ------------------------------------------------------------------ params
+def _param_rule(path: str, shape, mesh):
+    tp, dt = "model", "data"
+    lead = ("blocks/groups/" in path)  # stacked (G, ...) leaves
+
+    def spec(*axes):
+        axes = ((None,) + axes) if lead else axes
+        return _ns(mesh, shape, *axes)
+
+    name = path.rsplit("/", 2)[-2:]  # e.g. ["wq", "w"]
+    leaf = "/".join(name)
+
+    if path.endswith("embed"):
+        if shape[0] % mesh.shape[tp] == 0:
+            return _ns(mesh, shape, tp, None)
+        return _ns(mesh, shape, None, tp)
+    if "lm_head" in path or "frontend_proj" in path:
+        return _ns(mesh, shape, dt, tp)
+    if "router" in path or "norm" in path:
+        return spec()
+    # MoE expert banks (E, D, F) / (E, F, D)
+    if len(shape) - (1 if lead else 0) == 3 and (
+            "w_gate" in path or "w_up" in path or "w_down" in path):
+        if "w_down" in path:
+            return spec(tp, None, dt)
+        return spec(tp, dt, None)
+    if leaf in ("wq/w", "wk/w", "wv/w", "w_gate/w", "w_up/w",
+                "w_gate_branch/w", "w_x_branch/w", "w_a/w", "w_i/w",
+                "in_proj/w"):
+        return spec(dt, tp)
+    if leaf in ("wo/w", "w_down/w", "w_out/w", "out_proj/w"):
+        return spec(tp, dt)
+    if leaf.endswith("/b") or path.endswith("lam") or path.endswith("a_log") \
+            or path.endswith("d_skip") or path.endswith("dt_bias"):
+        return spec(tp)
+    if path.endswith("conv_w"):
+        return spec(None, tp)
+    if path.endswith("conv_b"):
+        return spec(tp)
+    return spec()
+
+
+def partition_params(params_tree, cfg: ModelConfig, mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    out = [_param_rule(_path_str(p), l.shape, mesh) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def partition_opt(opt_tree, cfg: ModelConfig, mesh):
+    """AdamWState(step, master, m, v): moments/masters mirror param specs."""
+    pspec = partition_params(opt_tree.master, cfg, mesh)
+    scalar = NamedSharding(mesh, P())
+    return type(opt_tree)(scalar, pspec, pspec, pspec)
+
+
+# ------------------------------------------------------------------ batch
+def partition_batch(batch_tree, cfg: ModelConfig, shape: ShapeConfig, mesh):
+    dp = dp_axes(mesh)
+    b = shape.global_batch
+
+    def one(leaf):
+        dpb = dp if b % dp_size(mesh) == 0 else None
+        return _ns(mesh, leaf.shape, dpb, *(None,) * (len(leaf.shape) - 1))
+
+    return jax.tree.map(one, batch_tree)
+
+
+# ------------------------------------------------------------------ cache
+def partition_cache(cache_tree, cfg: ModelConfig, shape: ShapeConfig, mesh):
+    dp = dp_axes(mesh)
+    tp = "model"
+    b = shape.global_batch
+    dpb = dp if b % dp_size(mesh) == 0 else None
+    # long-context (B=1): spread the cache sequence over everything
+    seq_ax = tp if dpb is not None else tuple(dp) + (tp,)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for path, leaf in flat:
+        def _name(p):
+            return getattr(p, "name", getattr(p, "key", getattr(p, "idx", None)))
+
+        top = _name(path[0]) if path else None
+        if top == "pos":
+            out.append(NamedSharding(mesh, P()))
+            continue
+        in_groups = top == "groups"
+        field = _name(path[-1])  # 'k'|'v'|'key_pos'|'conv_state'|'ssm_state'|0|1
+        shp = leaf.shape
+        lead = (None,) if in_groups else ()
+        core = shp[1:] if in_groups else shp
+        if field in ("k", "v"):  # (B, T, KV, hd)
+            spec = lead + (dpb, seq_ax, None, None)
+        elif field in ("k_scale", "v_scale"):  # (B, T, KV)
+            spec = lead + (dpb, seq_ax, None)
+        elif field == "key_pos":  # (B, T)
+            spec = lead + (dpb, seq_ax)
+        elif field == "ssm_state":  # (B, H, P, N)
+            spec = lead + (dpb, tp, None, None)
+        elif field == "conv_state" or len(core) == 3:  # (B, cw-1, C)
+            spec = lead + (dpb, None, tp)
+        elif len(core) == 2:  # rglru h: (B, W)
+            spec = lead + (dpb, seq_ax if dpb is None else tp)
+        else:
+            spec = (None,) * len(shp)
+        out.append(_ns(mesh, shp, *spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ------------------------------------------------------------- full bundles
+def partition_inputs(specs: Any, cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Shardings matching launch.steps.input_specs(cfg, shape)."""
+    if shape.kind == "train":
+        params, opt, batch = specs
+        return (partition_params(params, cfg, mesh),
+                partition_opt(opt, cfg, mesh),
+                partition_batch(batch, cfg, shape, mesh))
+    if shape.kind == "prefill":
+        params, batch = specs
+        return (partition_params(params, cfg, mesh),
+                partition_batch(batch, cfg, shape, mesh))
+    params, cache, token = specs
+    return (partition_params(params, cfg, mesh),
+            partition_cache(cache, cfg, shape, mesh),
+            partition_batch(token, cfg, shape, mesh))

@@ -1,0 +1,115 @@
+"""Step functions (train / prefill / serve) and abstract input specs.
+
+These are the exact computations the dry-run lowers and the trainers run.
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
+device allocation) for every model input of a given (arch x shape) cell.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import decode_step, init_params, loss_fn, prefill
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+
+
+# ------------------------------------------------------------------ steps
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig()):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg)
+        new_params, new_opt, om = adamw_update(grads, opt_state, opt_cfg)
+        metrics = dict(metrics, **om)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token):
+        return decode_step(params, cache, token, cfg)
+
+    return serve_step
+
+
+# ------------------------------------------------------------- input specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract batch for a shape cell (training or prefill prompt)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend != "none":
+        batch = {"embeddings": _sds((b, s, cfg.frontend_dim), jnp.bfloat16)}
+    else:
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                          jax.random.key(0))
+
+
+def opt_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda p: init_adamw(p), params_specs(cfg))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract decode cache for a (arch x decode-shape) cell: the state after
+    prefilling ``seq_len`` tokens (serve_step decodes token seq_len+1)."""
+    b, s = shape.global_batch, shape.seq_len
+
+    def build(params):
+        if cfg.frontend != "none":
+            batch = {"embeddings": jnp.zeros((b, s, cfg.frontend_dim),
+                                             jnp.bfloat16)}
+        else:
+            batch = {"tokens": jnp.zeros((b, s), jnp.int32)}
+        # steady-state ring: T_alloc == seq_len exactly ("one new token with
+        # a KV cache of seq_len"); also keeps T divisible for seq-sharding
+        _, cache = prefill(params, batch, cfg, max_new_tokens=0)
+        return cache
+
+    return jax.eval_shape(build, params_specs(cfg))
+
+
+def token_specs(shape: ShapeConfig):
+    return _sds((shape.global_batch, 1), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """All abstract inputs for the cell's step function, keyed by kind:
+    train  -> (params, opt_state, batch)
+    prefill-> (params, batch)
+    decode -> (params, cache, token)
+    """
+    if shape.kind == "train":
+        return (params_specs(cfg), opt_specs(cfg), batch_specs(cfg, shape))
+    if shape.kind == "prefill":
+        return (params_specs(cfg), batch_specs(cfg, shape))
+    if shape.kind == "decode":
+        return (params_specs(cfg), cache_specs(cfg, shape),
+                token_specs(shape))
+    raise ValueError(shape.kind)
+
+
+def step_fn_for(cfg: ModelConfig, shape: ShapeConfig):
+    if shape.kind == "train":
+        return make_train_step(cfg)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_serve_step(cfg)

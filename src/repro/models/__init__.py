@@ -1,0 +1,3 @@
+from repro.models.model import (decode_step, forward_logits, init_params,
+                                loss_fn, prefill)
+from repro.models.transformer import StackCache, init_stack, stack_forward

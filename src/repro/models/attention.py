@@ -1,0 +1,255 @@
+"""GQA attention: full-causal and sliding-window, train/prefill/decode.
+
+Memory-bounded by construction (framework targets 500k-token caches):
+  * train/prefill run a scan over query chunks; global layers score each chunk
+    against the full K/V (peak = one chunk of scores), local layers slice only
+    a window+chunk K/V span (O(S*W) total work).
+  * decode uses a single-token query against the cache; local layers keep a
+    ring buffer of ``window`` entries, so a 500k-context local layer costs
+    O(window), not O(S).
+
+Cache entry per attention layer: {"k","v": (B, T_alloc, KV, hd) roped keys,
+"key_pos": (B, T_alloc) int32 absolute positions (-1 = empty)} — explicit
+positions make ring-buffer semantics exact and testable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense, init_dense, shard_hint
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False,
+                   dtype=jnp.bfloat16):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d_model, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wk": init_dense(kk, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wv": init_dense(kv, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wo": init_dense(ko, n_heads * head_dim, d_model, dtype=dtype),
+    }
+
+
+def _project_qkv(params, x, n_heads, n_kv_heads, head_dim, positions,
+                 rope_theta, **imc):
+    b, s, _ = x.shape
+    q = dense(params["wq"], x, **imc).reshape(b, s, n_heads, head_dim)
+    k = dense(params["wk"], x, **imc).reshape(b, s, n_kv_heads, head_dim)
+    v = dense(params["wv"], x, **imc).reshape(b, s, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    q = shard_hint(q, "heads")
+    # K/V replicated across TP once per layer -> the q-chunk loop contracts
+    # locally instead of resharding score-sized tensors every chunk (§Perf)
+    k = shard_hint(k, "kv_rep")
+    v = shard_hint(v, "kv_rep")
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, *, native_dtype_dots: bool = True):
+    """q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd); mask: (B,1,1,Sq,Sk) or broadcastable.
+
+    Grouped formulation keeps the KV axis explicit (no materialized repeat).
+    ``native_dtype_dots``: contract in the input dtype with f32 ACCUMULATION
+    (flash-attention numerics).  The alternative (cast operands to f32 first)
+    doubles the bytes of every sharded-operand collective inside the chunk
+    loop (§Perf iteration 2); softmax always runs in f32 either way.
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, sq, kv, rep, hd)
+    if not native_dtype_dots:
+        qg, k, v = (t.astype(jnp.float32) for t in (qg, k, v))
+    scores = jnp.einsum("bqkrd,btkd->bkrqt", qg, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrqt,btkd->bqkrd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _chunked_causal(q, k, v, *, window: int = 0, q_chunk: int = 512,
+                    chunk_remat: bool = True, native_dtype_dots: bool = True):
+    """Causal (optionally windowed) attention via a scan over query chunks.
+
+    ``chunk_remat`` rematerializes each chunk's scores in the backward pass —
+    without it the scan backward saves stacked per-chunk score tensors, i.e.
+    the full S x T score matrix the chunking exists to avoid (measured ~6 TB
+    of HBM traffic on qwen2.5 train_4k; see EXPERIMENTS §Perf iteration 1).
+    """
+    b, s, h, hd = q.shape
+    chunk = q_chunk if s % q_chunk == 0 else s
+    nc = s // chunk
+    if nc == 1:
+        qp = jnp.arange(s)[:, None]
+        kp = jnp.arange(s)[None, :]
+        mask = kp <= qp
+        if window:
+            mask &= kp > qp - window
+        return _sdpa(q, k, v, mask[None, None, None],
+                     native_dtype_dots=native_dtype_dots)
+
+    qs = q.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    if window and window + chunk < s:
+        span = window + chunk  # static slice size covering the window
+
+        def body(_, args):
+            ci, qc = args
+            q_start = ci * chunk
+            k_start = jnp.clip(q_start + chunk - span, 0, s - span)
+            kc = jax.lax.dynamic_slice_in_dim(k, k_start, span, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, k_start, span, axis=1)
+            qp = (q_start + jnp.arange(chunk))[:, None]
+            kp = (k_start + jnp.arange(span))[None, :]
+            mask = (kp <= qp) & (kp > qp - window)
+            return None, _sdpa(qc, kc, vc, mask[None, None, None],
+                               native_dtype_dots=native_dtype_dots)
+    else:
+        def body(_, args):
+            ci, qc = args
+            q_start = ci * chunk
+            qp = (q_start + jnp.arange(chunk))[:, None]
+            kp = jnp.arange(s)[None, :]
+            mask = kp <= qp
+            if window:
+                mask &= kp > qp - window
+            return None, _sdpa(qc, k, v, mask[None, None, None],
+                               native_dtype_dots=native_dtype_dots)
+
+    if chunk_remat:
+        body = jax.checkpoint(body)
+    _, out = jax.lax.scan(body, None, (jnp.arange(nc), qs))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+class AttnCache(NamedTuple):
+    k: jnp.ndarray  # (B, T_alloc, KV, hd) roped keys (bf16 or int8)
+    v: jnp.ndarray
+    key_pos: jnp.ndarray  # (B, T_alloc) int32; -1 = empty slot
+    k_scale: jnp.ndarray | None = None  # (B, T_alloc, KV) f16 when int8 cache
+    v_scale: jnp.ndarray | None = None
+
+
+def _kv_quant(x):
+    """Per-(B,T,KV) int8 quantization of roped K/V (amax over head_dim)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+            ).astype(dtype)
+
+
+def attn_forward(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
+                 window: int = 0, positions=None, q_chunk: int = 512,
+                 chunk_remat: bool = True, native_dtype_dots: bool = True,
+                 use_flash: bool = False, **imc):
+    """Training / no-cache forward. x: (B, S, D) -> (B, S, D)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim,
+                           positions, rope_theta, **imc)
+    if use_flash:
+        from repro.kernels.flash_attn.ops import flash_attention
+
+        out = flash_attention(q, k, v, window=window)
+    else:
+        out = _chunked_causal(q, k, v, window=window, q_chunk=q_chunk,
+                              chunk_remat=chunk_remat,
+                              native_dtype_dots=native_dtype_dots)
+    return dense(params["wo"], out.reshape(b, s, -1), **imc)
+
+
+def attn_prefill(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
+                 window: int = 0, cache_len: int | None = None,
+                 q_chunk: int = 512, kv_dtype: str = "bf16", **imc):
+    """Prefill: forward over the prompt AND build the decode cache.
+
+    cache_len defaults to S for global layers, window for local layers.
+    ``kv_dtype="int8"`` stores quantized K/V + per-(B,T,KV) scales (halves
+    decode HBM traffic; see EXPERIMENTS §Perf).
+    """
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim,
+                           positions, rope_theta, **imc)
+    out = _chunked_causal(q, k, v, window=window, q_chunk=q_chunk)
+    t_alloc = cache_len if cache_len is not None else (window if window else s)
+    if t_alloc <= s:  # keep the last t_alloc entries, ring-aligned so that
+        # entry for position p sits at slot p % t_alloc (decode invariant)
+        shift = s % t_alloc
+        ck = jnp.roll(k[:, s - t_alloc:], shift, axis=1)
+        cv = jnp.roll(v[:, s - t_alloc:], shift, axis=1)
+        cp = jnp.roll(jnp.broadcast_to(
+            jnp.arange(s - t_alloc, s)[None], (b, t_alloc)), shift, axis=1)
+    else:  # roomier cache than the prompt: left-fill
+        pad = t_alloc - s
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cp = jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(s)[None], (b, s)),
+             jnp.full((b, pad), -1, jnp.int32)], axis=1)
+    if kv_dtype == "int8":
+        ck, ks = _kv_quant(ck)
+        cv, vs = _kv_quant(cv)
+        cache = AttnCache(ck, cv, cp.astype(jnp.int32), ks, vs)
+    else:
+        cache = AttnCache(ck, cv, cp.astype(jnp.int32))
+    y = dense(params["wo"], out.reshape(b, s, -1), **imc)
+    return y, cache
+
+
+def attn_decode(params, x, cache: AttnCache, pos, *, n_heads, n_kv_heads,
+                head_dim, rope_theta, window: int = 0, **imc):
+    """One-token decode. x: (B, 1, D); pos: scalar int32 (current position).
+
+    Writes the new K/V into slot ``pos % T_alloc`` (ring semantics for local
+    layers; for global layers T_alloc == context so the slot is just ``pos``).
+    """
+    b = x.shape[0]
+    t_alloc = cache.k.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, n_heads, n_kv_heads, head_dim,
+                                   positions, rope_theta, **imc)
+    slot = jnp.mod(pos, t_alloc)
+    int8_cache = cache.k_scale is not None
+    if int8_cache:
+        kq_new, ks_new = _kv_quant(k_new)
+        vq_new, vs_new = _kv_quant(v_new)
+        kq = jax.lax.dynamic_update_slice_in_dim(cache.k, kq_new, slot, axis=1)
+        vq = jax.lax.dynamic_update_slice_in_dim(cache.v, vq_new, slot, axis=1)
+        ks = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks_new, slot, axis=1)
+        vs = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs_new, slot, axis=1)
+        k = _kv_dequant(kq, ks, q.dtype)
+        v = _kv_dequant(vq, vs, q.dtype)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+    key_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.key_pos, positions.astype(jnp.int32), slot, axis=1)
+    valid = (key_pos >= 0) & (key_pos <= pos)
+    if window:
+        valid &= key_pos > pos - window
+    mask = valid[:, None, None, None, :]  # (B,1,1,1,T)
+    out = _sdpa(q, k, v, mask)
+    y = dense(params["wo"], out.reshape(b, 1, -1), **imc)
+    if int8_cache:
+        return y, AttnCache(kq, vq, key_pos, ks, vs)
+    return y, AttnCache(k, v, key_pos)

@@ -1,0 +1,159 @@
+"""Shared model utilities: norms, rope, dense layers (optionally IMC-backed),
+init helpers, and mesh-axis sharding hints.
+
+Models are pure-functional (params = plain pytrees of jnp arrays).  Sharding
+hints are optional: the launcher installs an :class:`AxisCtx` and layers call
+:func:`shard_hint`; without a context the hints are no-ops, so the same model
+code runs single-device (tests/examples) and multi-pod (dryrun/train).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.imc_linear import imc_linear_apply
+
+# ------------------------------------------------------------- sharding hints
+_AXIS_CTX = threading.local()
+
+
+@dataclass(frozen=True)
+class AxisCtx:
+    dp: Union[str, Sequence[str], None]  # data-parallel mesh axes (batch)
+    tp: Optional[str]  # tensor-parallel mesh axis
+
+
+def set_axis_ctx(ctx: Optional[AxisCtx]):
+    _AXIS_CTX.value = ctx
+
+
+def get_axis_ctx() -> Optional[AxisCtx]:
+    return getattr(_AXIS_CTX, "value", None)
+
+
+class axis_ctx:
+    """Context manager: with axis_ctx(AxisCtx(("pod","data"), "model")): ..."""
+
+    def __init__(self, ctx: Optional[AxisCtx]):
+        self.ctx = ctx
+
+    def __enter__(self):
+        self.prev = get_axis_ctx()
+        set_axis_ctx(self.ctx)
+        return self.ctx
+
+    def __exit__(self, *exc):
+        set_axis_ctx(self.prev)
+
+
+def shard_hint(x, kind: str):
+    """Constrain intermediate sharding; no-op without an AxisCtx.
+
+    kinds: "residual" (B, S, D) -> P(dp, tp, None)   [sequence parallelism]
+           "heads"    (B, S, H, d) -> P(dp, None, tp, None)
+           "ffn"      (B, S, F) -> P(dp, None, tp)
+           "logits"   (B, S, V) -> P(dp, None, tp)
+           "expert"   (E, C, D) -> P(tp, dp, None)
+
+    Every axis is divisibility-guarded against the ambient (abstract) mesh, so
+    the same model code serves 1-device tests and 512-chip lowering.
+    """
+    ctx = get_axis_ctx()
+    if ctx is None:
+        return x
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    dp, tp = ctx.dp, ctx.tp
+    spec = {
+        "residual": (dp, tp, None),
+        "heads": (dp, None, tp, None),
+        "ffn": (dp, None, tp),
+        "logits": (dp, None, tp),
+        "expert": (tp, dp, None),
+        "tokens": (dp, None),  # flattened (B*S, D) token tables
+        "expert_flat": ((tp,) + (dp if isinstance(dp, tuple) else (dp,)),
+                        None),  # (E*C, D) dispatch tables, E-major
+        "kv_rep": (dp, None, None, None),  # K/V gathered ONCE per layer:
+        # keeps the chunked-attention loop collective-free (Megatron-SP style)
+    }[kind]
+
+    def axis_size(ax):
+        if ax is None:
+            return 1
+        if isinstance(ax, (tuple, list)):
+            n = 1
+            for a in ax:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[ax]
+
+    fixed = tuple(ax if dim % axis_size(ax) == 0 else None
+                  for dim, ax in zip(x.shape, spec))
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+# ---------------------------------------------------------------------- norms
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (B, S, H, d); positions: (B, S) or (S,) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # (B, S, 1, d/2)
+    sin = sin[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- dense layers
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.bfloat16, scale: float | None = None):
+    s = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x, *, imc_mode: str = "off", imc_bits: int = 8,
+          use_kernel: bool = False):
+    """Dense projection; routes through the IMC fabric when imc_mode != off.
+
+    This is the paper-technique integration point: every projection in the
+    model zoo funnels through here.
+    """
+    if imc_mode != "off":
+        y = imc_linear_apply(x, params["w"].astype(jnp.float32),
+                             params.get("b"), imc_bits, imc_mode, use_kernel)
+        return y.astype(x.dtype)
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def count_params(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))

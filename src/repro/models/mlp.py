@@ -1,0 +1,31 @@
+"""Feed-forward blocks: SwiGLU / GEGLU / GELU, optionally IMC-executed."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, init_dense, shard_hint
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"w_gate": init_dense(k1, d_model, d_ff, dtype=dtype),
+                "w_up": init_dense(k2, d_model, d_ff, dtype=dtype),
+                "w_down": init_dense(k3, d_ff, d_model, dtype=dtype)}
+    if kind == "gelu":
+        return {"w_up": init_dense(k1, d_model, d_ff, dtype=dtype),
+                "w_down": init_dense(k2, d_ff, d_model, dtype=dtype)}
+    raise ValueError(kind)
+
+
+def apply_mlp(params, x, kind: str, **imc):
+    if kind in ("swiglu", "geglu"):
+        g = dense(params["w_gate"], x, **imc)
+        u = dense(params["w_up"], x, **imc)
+        g = shard_hint(g, "ffn")
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        return dense(params["w_down"], act * u, **imc)
+    u = dense(params["w_up"], x, **imc)
+    u = shard_hint(u, "ffn")
+    return dense(params["w_down"], jax.nn.gelu(u), **imc)

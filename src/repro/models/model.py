@@ -1,0 +1,128 @@
+"""LM wrapper: embeddings / modality frontends, stack, head, losses, steps.
+
+Public API:
+  init_params(key, cfg)                     -> params pytree
+  loss_fn(params, batch, cfg)               -> (loss, metrics)
+  forward_logits(params, batch, cfg)        -> logits (small models/examples)
+  prefill(params, batch, cfg)               -> (last_logits, StackCache)
+  decode_step(params, cache, token, cfg)    -> (logits, StackCache)
+
+Batches:
+  token LMs:       {"tokens": (B,S) int32, "labels": (B,S) int32}
+  audio/vlm stubs: {"embeddings": (B,S,Fd) bf16, "labels": (B,S) int32}
+  decode:          {"token": (B,1) int32} (+ cache)
+
+Cross-entropy is computed in sequence chunks with rematerialization so the
+(B,S,V) logits tensor never exists at once (V up to 262k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense, init_dense, init_rmsnorm, rmsnorm, shard_hint
+from repro.models.transformer import StackCache, init_stack, stack_forward
+
+AUX_LB_COEF = 0.01
+AUX_Z_COEF = 0.001
+CE_CHUNK = 512
+
+
+# -------------------------------------------------------------------- init
+def init_params(key, cfg: ModelConfig):
+    k_emb, k_stack, k_head, k_front = jax.random.split(key, 4)
+    params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(jnp.bfloat16),
+        "blocks": init_stack(k_stack, cfg),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if cfg.frontend != "none":
+        params["frontend_proj"] = init_dense(k_front, cfg.frontend_dim,
+                                             cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(k_head, cfg.d_model, cfg.vocab_size,
+                                       scale=cfg.d_model ** -0.5)
+    return params
+
+
+def _head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]["w"]
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    if cfg.frontend != "none":
+        x = dense(params["frontend_proj"], batch["embeddings"].astype(jnp.bfloat16))
+    else:
+        x = params["embed"][batch["tokens"]]
+    return shard_hint(x, "residual")
+
+
+# -------------------------------------------------------------------- loss
+def _chunked_ce(x, head_w, labels, chunk: int = CE_CHUNK):
+    """Mean token CE without materializing full (B,S,V) logits."""
+    b, s, d = x.shape
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(tot, args):
+        xi, li = args
+        logits = (xi @ head_w.astype(xi.dtype)).astype(jnp.float32)
+        logits = shard_hint(logits, "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(body, jnp.float32(0.0), (xc, lc))
+    return tot / (b * s)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x = _embed_inputs(params, batch, cfg)
+    x, _, aux = stack_forward(params["blocks"], x, cfg, "train")
+    x = rmsnorm(params["final_norm"], x)
+    ce = _chunked_ce(x, _head_weight(params, cfg), batch["labels"])
+    loss = ce
+    metrics = {"ce": ce}
+    if cfg.n_experts:
+        loss = (loss + AUX_LB_COEF * aux["load_balance_loss"]
+                + AUX_Z_COEF * aux["router_z_loss"])
+        metrics.update(aux)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def forward_logits(params, batch, cfg: ModelConfig):
+    """Full logits — small models only (examples / tests)."""
+    x = _embed_inputs(params, batch, cfg)
+    x, _, _ = stack_forward(params["blocks"], x, cfg, "train")
+    x = rmsnorm(params["final_norm"], x)
+    return (x @ _head_weight(params, cfg).astype(x.dtype)).astype(jnp.float32)
+
+
+# ------------------------------------------------------------------ serving
+def prefill(params, batch, cfg: ModelConfig, max_new_tokens: int = 0):
+    x = _embed_inputs(params, batch, cfg)
+    x, cache, _ = stack_forward(params["blocks"], x, cfg, "prefill",
+                                prefill_extra=max_new_tokens)
+    x_last = rmsnorm(params["final_norm"], x[:, -1:])
+    logits = (x_last @ _head_weight(params, cfg).astype(x_last.dtype))
+    return logits[:, 0].astype(jnp.float32), cache
+
+
+def decode_step(params, cache: StackCache, token, cfg: ModelConfig):
+    """token: (B, 1) int32. Returns (logits (B,V) f32, new cache)."""
+    x = params["embed"][token]
+    x = shard_hint(x, "residual")
+    x, new_cache, _ = stack_forward(params["blocks"], x, cfg, "decode",
+                                    cache=cache, pos=cache.pos)
+    x = rmsnorm(params["final_norm"], x)
+    logits = (x @ _head_weight(params, cfg).astype(x.dtype))
+    return logits[:, 0].astype(jnp.float32), new_cache

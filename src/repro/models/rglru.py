@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block = conv1d (width 4) -> real-gated linear recurrent unit, flanked by an
+input GeLU gate branch (the "recurrent block" of arXiv:2402.19427):
+
+    r_t = sigmoid(W_a x_t)                    (recurrence gate)
+    i_t = sigmoid(W_x x_t)                    (input gate)
+    a_t = exp(c * softplus(L) * (-r_t))       (log-space stable; c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` (log-depth parallel scan, the
+TPU-friendly formulation); decode is the O(1) recurrence step with carried h.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, init_dense
+
+_C = 8.0
+
+
+def init_rglru(key, d_model: int, width: int, conv_width: int = 4,
+               dtype=jnp.bfloat16):
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    return {
+        "w_gate_branch": init_dense(k1, d_model, width, dtype=dtype),
+        "w_x_branch": init_dense(k2, d_model, width, dtype=dtype),
+        "conv_w": (jax.random.normal(k3, (conv_width, width), jnp.float32)
+                   * conv_width ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_a": init_dense(k4, width, width, bias=True, dtype=dtype),
+        "w_i": init_dense(k5, width, width, bias=True, dtype=dtype),
+        "lam": jnp.asarray(
+            jax.random.uniform(k6, (width,), jnp.float32, 1.0, 4.0)),
+        "w_out": init_dense(k7, width, d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,W); w: (cw, W). state: (B, cw-1, W)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(cw))
+    new_state = xp[:, xp.shape[1] - (cw - 1):]
+    return out + b[None, None], new_state
+
+
+def _gates(params, xc):
+    r = jax.nn.sigmoid(dense(params["w_a"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(params["w_i"], xc).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # (..., W) f32, <= 0
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_x
+    return a, b
+
+
+def rglru_forward(params, x, *, h0=None, conv_state=None, **imc):
+    """Full-sequence forward. x: (B,S,D) -> (y, (h_last, conv_state))."""
+    gate = jax.nn.gelu(dense(params["w_gate_branch"], x, **imc))
+    xb = dense(params["w_x_branch"], x, **imc)
+    xc, conv_state = _causal_conv(xb, params["conv_w"], params["conv_b"],
+                                  conv_state)
+    a, b = _gates(params, xc)
+    if h0 is not None:
+        # fold the carried state in as a virtual step: h_t includes a-prefix * h0
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    y = dense(params["w_out"], (h.astype(x.dtype) * gate), **imc)
+    return y, (h[:, -1], conv_state)
+
+
+def rglru_decode(params, x, h, conv_state, **imc):
+    """One-step decode. x: (B,1,D); h: (B,W) f32; conv_state: (B,cw-1,W)."""
+    gate = jax.nn.gelu(dense(params["w_gate_branch"], x, **imc))
+    xb = dense(params["w_x_branch"], x, **imc)
+    xc, conv_state = _causal_conv(xb, params["conv_w"], params["conv_b"],
+                                  conv_state)
+    a, b = _gates(params, xc)  # (B,1,W)
+    h = a[:, 0] * h + b[:, 0]
+    y = dense(params["w_out"], (h[:, None].astype(x.dtype) * gate), **imc)
+    return y, (h, conv_state)

@@ -1,0 +1,179 @@
+"""Mamba2 SSD (state-space duality) block — chunked parallel form + O(1) decode.
+
+Selective SSM with scalar-per-head decay (arXiv:2405.21060):
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t x_t^T        (P x N state/head)
+    y_t = C_t . h_t + D_h * x_t
+Chunked algorithm: intra-chunk quadratic term (attention-like, MXU-friendly)
++ inter-chunk state recurrence (scan over S/chunk steps).  The block wraps the
+SSM with in_proj -> causal conv -> SiLU, a SiLU(z) gate, gated RMSNorm, and
+out_proj, matching the Mamba2 macro-block.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, init_dense, init_rmsnorm, rmsnorm
+
+
+class SsdCache(NamedTuple):
+    conv_state: jnp.ndarray  # (B, cw-1, conv_channels)
+    ssm_state: jnp.ndarray  # (B, H, P, N) float32
+
+
+def init_ssd(key, d_model: int, *, expand: int = 2, headdim: int = 64,
+             state: int = 128, n_groups: int = 1, conv_width: int = 4,
+             dtype=jnp.bfloat16):
+    d_inner = expand * d_model
+    heads = d_inner // headdim
+    conv_ch = d_inner + 2 * n_groups * state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": init_dense(k1, d_model,
+                              2 * d_inner + 2 * n_groups * state + heads,
+                              dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (conv_width, conv_ch), jnp.float32)
+                   * conv_width ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jax.random.uniform(k3, (heads,), jnp.float32, 1.0, 16.0)),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm": init_rmsnorm(d_inner, jnp.float32),
+        "out_proj": init_dense(k4, d_inner, d_model, dtype=dtype),
+    }
+
+
+def _split_proj(proj, d_inner, n_groups, state, heads):
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [d_inner + 2 * n_groups * state], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _causal_conv(x, w, b, state=None):
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(cw))
+    return out + b[None, None], xp[:, xp.shape[1] - (cw - 1):]
+
+
+def _ssd_chunked(x, dt, a_neg, B, C, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (Bt,S,H,P); dt: (Bt,S,H) >0; a_neg: (H,) <0; B,C: (Bt,S,G,N).
+    Returns y (Bt,S,H,P), h_last (Bt,H,P,N) float32.
+    """
+    bt, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+
+    xc = x.reshape(bt, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bt, nc, chunk, h)
+    # per-head B/C (expand groups)
+    Bh = jnp.repeat(B.reshape(bt, nc, chunk, g, n), rep, axis=3).astype(jnp.float32)
+    Ch = jnp.repeat(C.reshape(bt, nc, chunk, g, n), rep, axis=3).astype(jnp.float32)
+
+    a = dtc * a_neg[None, None, None, :]  # (bt,nc,chunk,h) <= 0
+    cum = jnp.cumsum(a, axis=2)
+
+    # ---- intra-chunk (quadratic, MXU): M[b,c,h,i,j] = CB * exp(cum_i - cum_j) * dt_j, i>=j
+    cb = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh)
+    cum_t = cum.transpose(0, 1, 3, 2)  # (bt,nc,h,chunk)
+    # decay[b,c,h,i,j] = exp(cum[b,c,i,h] - cum[b,c,j,h]), i >= j.
+    # Mask the EXPONENT (not the product): exp of the i<j entries overflows,
+    # and inf*0 would poison the backward pass with NaNs.
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, None]
+    diff = jnp.where(causal,
+                     cum_t[:, :, :, :, None] - cum_t[:, :, :, None, :],
+                     -jnp.inf)
+    decay = jnp.exp(diff)
+    m = cb * decay * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", m, xc)
+
+    # ---- chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    sdec = jnp.exp(cum[:, :, -1:, :] - cum)  # (bt,nc,chunk,h)
+    s_chunk = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn", sdec * dtc, Bh, xc)
+
+    # ---- inter-chunk recurrence over nc chunks
+    cdec = jnp.exp(cum[:, :, -1, :])  # (bt,nc,h)
+    h_init = (jnp.zeros((bt, h, p, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(hprev, inp):
+        dec, sc = inp  # (bt,h), (bt,h,p,n)
+        return dec[..., None, None] * hprev + sc, hprev
+
+    h_last, h_prevs = jax.lax.scan(
+        step, h_init,
+        (cdec.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # (bt,nc,h,p,n)
+
+    y_inter = jnp.einsum("bcihn,bchpn,bcih->bcihp", Ch, h_prevs,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bt, s, h, p)
+    return y, h_last
+
+
+def ssd_forward(params, x, *, expand: int = 2, headdim: int = 64,
+                state: int = 128, n_groups: int = 1, chunk: int = 128,
+                cache: SsdCache | None = None, **imc):
+    """Full-sequence forward. x: (B,S,D) -> (y, SsdCache)."""
+    bt, s, d = x.shape
+    d_inner = expand * d
+    heads = d_inner // headdim
+    proj = dense(params["in_proj"], x, **imc)
+    z, xbc, dt_raw = _split_proj(proj, d_inner, n_groups, state, heads)
+    conv_in_state = cache.conv_state if cache is not None else None
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                   conv_in_state)
+    xbc = jax.nn.silu(xbc)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + n_groups * state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a_neg = -jnp.exp(params["a_log"])
+    y, h_last = _ssd_chunked(
+        xs.reshape(bt, s, heads, headdim), dt, a_neg,
+        B.reshape(bt, s, n_groups, state), C.reshape(bt, s, n_groups, state),
+        chunk, h0=cache.ssm_state if cache is not None else None)
+    y = y + params["d_skip"][None, None, :, None] * xs.reshape(
+        bt, s, heads, headdim).astype(jnp.float32)
+    y = y.reshape(bt, s, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)))
+    out = dense(params["out_proj"], y.astype(x.dtype), **imc)
+    return out, SsdCache(conv_state, h_last)
+
+
+def ssd_decode(params, x, cache: SsdCache, *, expand: int = 2,
+               headdim: int = 64, state: int = 128, n_groups: int = 1, **imc):
+    """One-token decode. x: (B,1,D)."""
+    bt, _, d = x.shape
+    d_inner = expand * d
+    heads = d_inner // headdim
+    proj = dense(params["in_proj"], x, **imc)
+    z, xbc, dt_raw = _split_proj(proj, d_inner, n_groups, state, heads)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                   cache.conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + n_groups * state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]
+    a_neg = -jnp.exp(params["a_log"])
+    xh = xs.reshape(bt, heads, headdim).astype(jnp.float32)
+    rep = heads // n_groups
+    Bh = jnp.repeat(B.reshape(bt, n_groups, state), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C.reshape(bt, n_groups, state), rep, axis=1).astype(jnp.float32)
+    dec = jnp.exp(dt * a_neg[None])  # (B,H)
+    h = (dec[..., None, None] * cache.ssm_state
+         + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, xh))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h) + params["d_skip"][None, :, None] * xh
+    y = y.reshape(bt, 1, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)))
+    out = dense(params["out_proj"], y.astype(x.dtype), **imc)
+    return out, SsdCache(conv_state, h)

@@ -1,0 +1,52 @@
+"""Gradient compression for cross-pod all-reduce: int8 + error feedback.
+
+At multi-pod scale the 'pod' axis rides DCN/optical links an order of
+magnitude slower than intra-pod ICI, so the cross-pod gradient reduction is
+the first collective to saturate.  Compressing to int8 with per-tensor scales
+cuts those bytes 4x (vs f32) / 2x (vs bf16); error feedback (residual carried
+to the next step) keeps convergence unbiased in practice.
+
+Composes in front of the optimizer: compress -> (all-reduce) -> decompress.
+On a single host the all-reduce is the identity; the numerics (quantize +
+residual) are exactly what runs at scale, so tests validate convergence.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any  # error-feedback carry, same pytree as grads (f32)
+
+
+def init_compression(grads_like) -> CompressionState:
+    return CompressionState(jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def compress(grads, state: CompressionState):
+    """Returns ((q int8 tree, scales tree), new residual carry)."""
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        amax = jnp.max(jnp.abs(g))
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        new_r = g - q.astype(jnp.float32) * scale
+        return (q, scale), new_r
+
+    flat, treedef = jax.tree.flatten(grads)
+    rflat = jax.tree.leaves(state.residual)
+    qs, rs = zip(*(one(g, r) for g, r in zip(flat, rflat)))
+    q_tree = jax.tree.unflatten(treedef, [q for q, _ in qs])
+    s_tree = jax.tree.unflatten(treedef, [s for _, s in qs])
+    return (q_tree, s_tree), CompressionState(
+        jax.tree.unflatten(treedef, list(rs)))
+
+
+def decompress(q_tree, s_tree):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        q_tree, s_tree)

@@ -1,0 +1,57 @@
+"""Straggler detection & mitigation policy.
+
+At fleet scale, slow hosts (thermal throttling, failing HBM, noisy neighbors)
+stretch every synchronous step.  The monitor keeps an EWMA/variance estimate
+of per-host step times and flags hosts exceeding ``threshold`` x the fleet
+median for ``patience`` consecutive steps; the policy layer then requests a
+hot-spare swap (simulated here) or, for mild cases, recommends shrinking that
+host's microbatch (work-stealing).  Pure-host-side logic: no device code, so
+it is exactly what a real deployment would run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class StragglerConfig:
+    threshold: float = 1.5  # x median step time
+    patience: int = 3
+    ewma: float = 0.7
+
+
+@dataclass
+class HostStats:
+    ewma_time: float = 0.0
+    strikes: int = 0
+    flagged: bool = False
+
+
+@dataclass
+class StragglerMonitor:
+    cfg: StragglerConfig = field(default_factory=StragglerConfig)
+    hosts: Dict[int, HostStats] = field(default_factory=dict)
+    swaps: List[int] = field(default_factory=list)
+
+    def record_step(self, times: Dict[int, float]) -> List[int]:
+        """Feed per-host wall times for one step; returns hosts to replace."""
+        for h, t in times.items():
+            st = self.hosts.setdefault(h, HostStats(ewma_time=t))
+            st.ewma_time = self.cfg.ewma * st.ewma_time + (1 - self.cfg.ewma) * t
+        med = sorted(s.ewma_time for s in self.hosts.values())[len(self.hosts) // 2]
+        to_swap = []
+        for h, st in self.hosts.items():
+            if st.ewma_time > self.cfg.threshold * med:
+                st.strikes += 1
+                if st.strikes >= self.cfg.patience and not st.flagged:
+                    st.flagged = True
+                    to_swap.append(h)
+            else:
+                st.strikes = 0
+        self.swaps.extend(to_swap)
+        return to_swap
+
+    def replace_host(self, host: int):
+        """Hot-spare swap completed: reset stats for the slot."""
+        self.hosts[host] = HostStats()

@@ -1,0 +1,186 @@
+"""Quantization / bit-serial / imc_matmul correctness tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitserial import bitserial_matmul_unsigned, decode_group_counts, group_counts
+from repro.core.imc_linear import apply_imc_linear, init_imc_linear
+from repro.core.imc_matmul import imc_matmul, imc_matmul_cost, int_matmul
+from repro.core.quant import (dequantize, from_bitplanes, quantize,
+                              signed_product_correction, to_bitplanes,
+                              to_offset_binary)
+
+
+# ----------------------------------------------------------------- quantize
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("axis", [None, 0])
+def test_quant_roundtrip_error_bound(bits, axis):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(32, 64)).astype(np.float32)
+    qx = quantize(jnp.asarray(x), bits, axis=axis)
+    err = np.abs(np.asarray(dequantize(qx)) - x)
+    # max error is half a quantization step per element
+    step = np.asarray(qx.scale)
+    assert np.all(err <= 0.5 * step + 1e-6)
+
+
+def test_bitplane_roundtrip():
+    rng = np.random.default_rng(1)
+    u = rng.integers(0, 256, size=(5, 17)).astype(np.int32)
+    planes = to_bitplanes(jnp.asarray(u), 8)
+    assert planes.shape == (8, 5, 17)
+    assert set(np.unique(np.asarray(planes))) <= {0, 1}
+    np.testing.assert_array_equal(from_bitplanes(planes), u)
+
+
+def test_offset_binary_correction_identity():
+    rng = np.random.default_rng(2)
+    qa = rng.integers(-127, 128, size=(6, 24)).astype(np.int32)
+    qw = rng.integers(-127, 128, size=(24, 10)).astype(np.int32)
+    ua, uw = to_offset_binary(jnp.asarray(qa)), to_offset_binary(jnp.asarray(qw))
+    unsigned = jnp.asarray(ua) @ jnp.asarray(uw)
+    corr = signed_product_correction(ua, uw)
+    np.testing.assert_array_equal(np.asarray(unsigned - corr), qa @ qw)
+
+
+# ---------------------------------------------------------------- bitserial
+def test_group_counts_match_blocked_popcount():
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 2, size=(4, 19)).astype(np.uint8)  # K=19 -> pad to 24
+    w = rng.integers(0, 2, size=(19, 7)).astype(np.uint8)
+    counts = np.asarray(group_counts(jnp.asarray(a), jnp.asarray(w)))
+    assert counts.shape == (4, 3, 7)
+    assert counts.min() >= 0 and counts.max() <= 8
+    np.testing.assert_array_equal(counts.sum(axis=1),
+                                  a.astype(np.int32) @ w.astype(np.int32))
+
+
+def test_decode_exact_vs_sim_noiseless_identical():
+    rng = np.random.default_rng(4)
+    counts = jnp.asarray(rng.integers(0, 9, size=(5, 4, 3)))
+    exact = decode_group_counts(counts, mode="exact")
+    sim = decode_group_counts(counts, mode="sim")
+    np.testing.assert_array_equal(np.asarray(exact), np.asarray(sim))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_bitserial_matmul_equals_integer_matmul(bits):
+    rng = np.random.default_rng(5)
+    hi = 1 << bits
+    ua = jnp.asarray(rng.integers(0, hi, size=(3, 21)).astype(np.int32))
+    uw = jnp.asarray(rng.integers(0, hi, size=(21, 6)).astype(np.int32))
+    out = bitserial_matmul_unsigned(ua, uw, bits_a=bits, bits_w=bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ua) @ np.asarray(uw))
+
+
+def test_bitserial_sim_noiseless_equals_exact():
+    rng = np.random.default_rng(6)
+    ua = jnp.asarray(rng.integers(0, 16, size=(2, 16)).astype(np.int32))
+    uw = jnp.asarray(rng.integers(0, 16, size=(16, 4)).astype(np.int32))
+    a = bitserial_matmul_unsigned(ua, uw, bits_a=4, bits_w=4, mode="exact")
+    b = bitserial_matmul_unsigned(ua, uw, bits_a=4, bits_w=4, mode="sim")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------- imc_matmul
+def test_imc_matmul_exact_close_to_float():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    y = imc_matmul(x, w, bits=8, mode="exact")
+    ref = x @ w
+    rel = np.linalg.norm(np.asarray(y - ref)) / np.linalg.norm(np.asarray(ref))
+    assert rel < 0.02  # int8 quantization error budget
+
+
+def test_imc_matmul_sim_noiseless_equals_exact():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(4, 24)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(24, 8)).astype(np.float32))
+    ye = imc_matmul(x, w, bits=4, mode="exact")
+    ys = imc_matmul(x, w, bits=4, mode="sim")
+    np.testing.assert_allclose(np.asarray(ye), np.asarray(ys), rtol=1e-6)
+
+
+def test_imc_matmul_sim_with_mismatch_bounded_error():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+    y = imc_matmul(x, w, bits=8, mode="sim", mismatch=True,
+                   key=jax.random.key(0))
+    ref = np.asarray(x @ w)
+    rel = np.linalg.norm(np.asarray(y) - ref) / np.linalg.norm(ref)
+    # Voltage-referred mismatch preserves decode margins (paper §IV-C):
+    # occasional +-1 count flips at most, so the result stays accurate.
+    assert rel < 0.05
+
+
+def test_mismatch_flips_are_rare_but_possible():
+    # With sigma_vk cranked up, decode errors MUST appear (sanity that the
+    # noise is actually wired through); with the calibrated value they are
+    # rare enough to keep exact == sim on small problems (paper margins).
+    from repro.core.bitserial import decode_group_counts
+    counts = jnp.full((4096,), 4, jnp.int32)
+    noisy = decode_group_counts(counts, mode="sim", mismatch=True,
+                                key=jax.random.key(3))
+    calibrated_flips = int(np.sum(np.asarray(noisy) != 4))
+    import repro.core.constants as C
+    big = decode_group_counts(counts, mode="sim", mismatch=True,
+                              key=jax.random.key(3), )
+    assert calibrated_flips < 40  # < 1% at sigma_vk = 0.05
+    # direct check that larger sigma produces flips
+    from repro.core.montecarlo import mc_count_noise
+    from repro.core.rbl import rbl_voltage
+    from repro.core.decoder import decode_voltage
+    k_eff = counts.astype(jnp.float32) + mc_count_noise(
+        jax.random.key(4), counts.shape, counts, sigma_vk=0.5)
+    dec = decode_voltage(rbl_voltage(k_eff))
+    assert int(np.sum(np.asarray(dec) != 4)) > 100
+
+
+def test_imc_matmul_use_kernel_matches_xla_path():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(24, 80)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(80, 40)).astype(np.float32))
+    y_xla = imc_matmul(x, w, bits=8, mode="exact", use_kernel=False)
+    y_ker = imc_matmul(x, w, bits=8, mode="exact", use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_ker), rtol=1e-6)
+
+
+def test_int_matmul_int32_accumulation():
+    qa = jnp.full((2, 512), 127, jnp.int8)
+    qw = jnp.full((512, 2), 127, jnp.int8)
+    out = np.asarray(int_matmul(qa, qw))
+    assert out.dtype == np.int32
+    np.testing.assert_array_equal(out, np.full((2, 2), 127 * 127 * 512))
+
+
+def test_imc_matmul_cost_report():
+    rep = imc_matmul_cost((128, 256), (256, 64), bits=8)
+    # evaluations = M * ceil(K/8) * bits^2 * ceil(N/8)
+    assert rep.evaluations == 128 * 32 * 64 * 8
+    assert rep.energy_j > 0 and rep.latency_s > 0
+    assert rep.macs == 128 * 256 * 64 * 64
+    cold = imc_matmul_cost((128, 256), (256, 64), schedule="cold")
+    assert cold.latency_s > rep.latency_s  # weight-stationary is faster
+
+
+# --------------------------------------------------------------- imc_linear
+def test_imc_linear_forward_and_grads():
+    key = jax.random.key(0)
+    p = init_imc_linear(key, 32, 16, use_bias=True)
+    x = jax.random.normal(jax.random.key(1), (8, 32))
+
+    def loss(params, x):
+        y = apply_imc_linear(params, x)
+        return jnp.sum(y * y)
+
+    val, grads = jax.value_and_grad(loss)(p, x)
+    assert np.isfinite(float(val))
+    assert grads["w"].shape == (32, 16) and grads["b"].shape == (16,)
+    assert np.all(np.isfinite(np.asarray(grads["w"])))
+    # STE: grads match the float-matmul surrogate
+    y = apply_imc_linear(p, x)
+    np.testing.assert_allclose(np.asarray(grads["b"]),
+                               np.asarray(2 * y.sum(0)), rtol=1e-4)

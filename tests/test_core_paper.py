@@ -1,0 +1,192 @@
+"""Paper-fidelity tests: the core model must reproduce Tables I-IV, Fig 5, Fig 6."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import constants as C
+from repro.core import (ArraySpec, Timing, add_1bit, decode_voltage,
+                        empty_state, level_voltages, logic2, logic_energy_fj,
+                        logic_from_count, mac, mac_energy_fj, mc_stats,
+                        rbl_voltage, read_bit, thermometer_code, write,
+                        write_row)
+
+
+# ----------------------------------------------------------------- Table I
+def test_table1_lut_voltages_exact():
+    ks = jnp.arange(9)
+    np.testing.assert_allclose(rbl_voltage(ks, mode="lut"), C.V_RBL_TABLE,
+                               atol=1e-6)
+
+
+def test_table1_physics_fit_tolerance():
+    ks = jnp.arange(9)
+    v = rbl_voltage(ks, mode="physics")
+    np.testing.assert_allclose(v, C.V_RBL_TABLE, atol=0.020)  # <= 20 mV
+
+
+def test_voltage_monotone_decreasing():
+    for mode in ("lut", "physics"):
+        v = np.asarray(rbl_voltage(jnp.arange(9), mode=mode))
+        assert np.all(np.diff(v) < 0)
+
+
+def test_physics_scales_to_larger_arrays():
+    # Paper §III-F: larger arrays shrink level spacing but keep ordering.
+    v16 = np.asarray(rbl_voltage(jnp.arange(17), rows=16, mode="physics"))
+    assert np.all(np.diff(v16) < 0)
+    sp8 = -np.diff(np.asarray(rbl_voltage(jnp.arange(9), mode="physics")))
+    sp16 = -np.diff(v16)
+    assert sp16[0] < sp8[0]  # reduced spacing with bigger C_RBL
+
+
+def test_table1_decoded_thermometer_codes():
+    # Table I: k=0 -> 11111111 ... k=8 -> 00000000.
+    v = rbl_voltage(jnp.arange(9), mode="lut")
+    codes = thermometer_code(v)
+    for k in range(9):
+        assert int(codes[k].sum()) == 8 - k
+    counts = decode_voltage(v)
+    np.testing.assert_array_equal(counts, np.arange(9))
+
+
+# ---------------------------------------------------------------- Table II
+def test_table2_logic_interpretation():
+    # Data patterns 00, 01, 10, 11 -> counts 0, 1, 1, 2.
+    counts = jnp.array([0, 1, 1, 2])
+    out = logic_from_count(counts, m=2)
+    np.testing.assert_array_equal(out["AND"], [0, 0, 0, 1])
+    np.testing.assert_array_equal(out["NOR"], [1, 0, 0, 0])
+    np.testing.assert_array_equal(out["XOR"], [0, 1, 1, 0])
+    np.testing.assert_array_equal(out["NAND"], [1, 1, 1, 0])
+    np.testing.assert_array_equal(out["OR"], [0, 1, 1, 1])
+    np.testing.assert_array_equal(out["XNOR"], [1, 0, 0, 1])
+    s, c = add_1bit(counts)
+    np.testing.assert_array_equal(s, [0, 1, 1, 0])
+    np.testing.assert_array_equal(c, [0, 0, 0, 1])
+
+
+def test_table2_voltages_match():
+    v = rbl_voltage(jnp.array([0, 1, 1, 2]), mode="lut")
+    np.testing.assert_allclose(v, [1.758, 1.528, 1.528, 1.308], atol=1e-6)
+
+
+# --------------------------------------------------------------- Table III
+def test_table3_energy_lut_exact():
+    np.testing.assert_allclose(mac_energy_fj(jnp.arange(9)), C.E_MAC_TABLE_FJ,
+                               atol=1e-4)
+
+
+def test_table3_energy_fit():
+    e = mac_energy_fj(jnp.arange(9), exact=False)
+    # quadratic fit through the physics voltages: generous tolerance
+    np.testing.assert_allclose(e, C.E_MAC_TABLE_FJ, atol=12.0)
+
+
+def test_energy_monotone_in_count():
+    e = np.asarray(mac_energy_fj(jnp.arange(9)))
+    assert np.all(np.diff(e) > 0)
+
+
+def test_energy_per_bit():
+    assert abs(C.ENERGY_PER_BIT_FJ - 56.56) < 0.06  # paper: 56.56 fJ/bit
+
+
+# ---------------------------------------------------------------- Table IV
+def test_table4_logic_energies():
+    assert logic_energy_fj("AND") == pytest.approx(212.7)
+    assert logic_energy_fj("CARRY") == pytest.approx(212.7)
+    assert logic_energy_fj("NOR") == pytest.approx(5.369)
+    assert logic_energy_fj("XOR") == pytest.approx(119.3)
+    assert logic_energy_fj("SUM") == pytest.approx(119.3)
+    # complements consume the same evaluation
+    assert logic_energy_fj("NAND") == pytest.approx(212.7)
+    assert logic_energy_fj("OR") == pytest.approx(5.369)
+    assert logic_energy_fj("XNOR") == pytest.approx(119.3)
+
+
+# -------------------------------------------------------------- Fig 5 timing
+def test_fig5_timing_model():
+    t = Timing()
+    assert t.t_op_s == pytest.approx(63e-9)
+    assert t.throughput_ops == pytest.approx(15.87e6, rel=0.01)  # paper: 15.8 M
+    assert t.f_clk_hz == pytest.approx(142.85e6, rel=0.001)
+    assert t.t_eval_s == pytest.approx(0.7e-9)
+
+
+# ---------------------------------------------------------- Fig 6 Monte-Carlo
+def test_fig6_montecarlo_stats():
+    mean, std = mc_stats(jax.random.key(0), k=8, n_samples=200_000)
+    assert float(mean) == pytest.approx(C.MC_MEAN_FJ, rel=0.02)  # 437 fJ
+    assert float(std) == pytest.approx(C.MC_STD_FJ, rel=0.05)  # 48.72 fJ
+
+
+def test_fig6_paper_sample_count():
+    # With the paper's own n=200, stats are within MC error of the target.
+    mean, std = mc_stats(jax.random.key(1), k=8, n_samples=200)
+    assert abs(float(mean) - C.MC_MEAN_FJ) < 15.0
+    assert abs(float(std) - C.MC_STD_FJ) < 10.0
+
+
+# ------------------------------------------------------------- array behavior
+def test_array_write_read_roundtrip():
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, size=(8, 8)).astype(np.uint8)
+    state = write(empty_state(), bits)
+    for r in range(8):
+        np.testing.assert_array_equal(read_bit(state, r), bits[r])
+
+
+def test_array_write_row_cycles():
+    state = empty_state()
+    bits = np.eye(8, dtype=np.uint8)
+    for r in range(8):  # 8 write cycles, as in Fig 5
+        state = write_row(state, r, bits[r])
+    np.testing.assert_array_equal(np.asarray(state), bits)
+
+
+def test_array_mac_full_path():
+    # Paper Fig 5 case: both operands 11111111 -> count 8, code 00000000.
+    state = write(empty_state(), np.ones((8, 8), np.uint8))
+    res = mac(state, np.ones(8, np.uint8))
+    np.testing.assert_array_equal(res.counts, np.full(8, 8))
+    np.testing.assert_array_equal(res.codes, np.zeros((8, 8), np.uint8))
+    np.testing.assert_allclose(res.volts, np.full(8, 0.310), atol=1e-6)
+    np.testing.assert_allclose(res.energy_fj, np.full(8, 452.2), atol=1e-3)
+
+
+def test_array_mac_random_counts():
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        b = rng.integers(0, 2, size=(8, 8)).astype(np.uint8)
+        a = rng.integers(0, 2, size=8).astype(np.uint8)
+        state = write(empty_state(), b)
+        res = mac(state, a)
+        np.testing.assert_array_equal(res.counts, (a[None].astype(int) @ b)[0])
+
+
+def test_array_logic2_bitwise_8bit():
+    # 8-bit bitwise ops: one bit per column (paper's 8-bit AND/NOR/XOR claim).
+    rng = np.random.default_rng(7)
+    wa = rng.integers(0, 2, size=8).astype(np.uint8)
+    wb = rng.integers(0, 2, size=8).astype(np.uint8)
+    state = write_row(write_row(empty_state(), 0, wa), 1, wb)
+    out, res = logic2(state, 0, 1)
+    np.testing.assert_array_equal(out["AND"], wa & wb)
+    np.testing.assert_array_equal(out["OR"], wa | wb)
+    np.testing.assert_array_equal(out["XOR"], wa ^ wb)
+    np.testing.assert_array_equal(out["NOR"], 1 - (wa | wb))
+
+
+def test_comparator_noise_within_margin():
+    # Level spacing is 100-250 mV; a 10 mV comparator offset never misdecodes.
+    v = rbl_voltage(jnp.arange(9), mode="lut")
+    counts = decode_voltage(jnp.tile(v, (64, 1)), comparator_offset_sigma=0.010,
+                            key=jax.random.key(2))
+    np.testing.assert_array_equal(counts, np.tile(np.arange(9), (64, 1)))
+
+
+def test_array_spec_validation():
+    with pytest.raises(ValueError):
+        ArraySpec(rows=16, mode="lut")
+    ArraySpec(rows=16, mode="physics")  # fine

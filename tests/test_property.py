@@ -1,0 +1,132 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import constants as C
+from repro.core.bitserial import bitserial_matmul_unsigned, group_counts
+from repro.core.decoder import decode_voltage
+from repro.core.logic import logic_from_count
+from repro.core.montecarlo import mc_energy_fj
+from repro.core.quant import (dequantize, from_bitplanes, quantize,
+                              signed_product_correction, to_bitplanes,
+                              to_offset_binary)
+from repro.core.rbl import rbl_voltage
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(0, 8))
+@settings(**SETTINGS)
+def test_decode_roundtrip_every_count(k):
+    """decode(thermometer(V(k))) == k for every k — both voltage models."""
+    for mode in ("lut", "physics"):
+        v = rbl_voltage(jnp.int32(k), mode=mode)
+        assert int(decode_voltage(v, mode=mode)) == k
+
+
+@given(st.integers(2, 8), st.integers(0, 8))
+@settings(**SETTINGS)
+def test_logic_consistency(m, count):
+    count = min(count, m)
+    out = logic_from_count(jnp.int32(count), m=m)
+    assert int(out["AND"]) == int(count == m)
+    assert int(out["NOR"]) == int(count == 0)
+    assert int(out["XOR"]) == count % 2
+    assert int(out["AND"]) + int(out["NAND"]) == 1
+    assert int(out["OR"]) + int(out["NOR"]) == 1
+    assert int(out["XOR"]) + int(out["XNOR"]) == 1
+    assert int(out["SUM"]) == int(out["XOR"])
+    assert int(out["CARRY"]) == int(out["AND"])
+
+
+@given(st.lists(st.booleans(), min_size=2, max_size=2),
+       st.lists(st.booleans(), min_size=2, max_size=2))
+@settings(**SETTINGS)
+def test_two_operand_truth_tables(a, b):
+    """All four 2-bit patterns, against python ground truth (Table II)."""
+    count = int(a[0] and b[0]) + int(a[1] and b[1])
+    # model: rows hold a AND b per cell; count == number of matched highs
+    out = logic_from_count(jnp.int32(int(a[0]) + int(a[1])), m=2)
+    x, y = int(a[0]), int(a[1])
+    assert int(out["AND"]) == (x & y)
+    assert int(out["OR"]) == (x | y)
+    assert int(out["XOR"]) == (x ^ y)
+    del count
+
+
+@given(st.integers(1, 6), st.integers(1, 40), st.integers(1, 12),
+       st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_group_counts_partition_matmul(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2, size=(m, k)).astype(np.uint8)
+    w = rng.integers(0, 2, size=(k, n)).astype(np.uint8)
+    counts = np.asarray(group_counts(jnp.asarray(a), jnp.asarray(w)))
+    assert counts.max(initial=0) <= C.ROWS
+    np.testing.assert_array_equal(counts.sum(axis=-2),
+                                  a.astype(np.int32) @ w.astype(np.int32))
+
+
+@given(st.integers(2, 8), st.integers(0, 2**32 - 1))
+@settings(max_examples=10, deadline=None)
+def test_bitserial_equals_matmul(bits, seed):
+    rng = np.random.default_rng(seed)
+    hi = 1 << bits
+    ua = jnp.asarray(rng.integers(0, hi, size=(3, 11)).astype(np.int32))
+    uw = jnp.asarray(rng.integers(0, hi, size=(11, 5)).astype(np.int32))
+    out = bitserial_matmul_unsigned(ua, uw, bits_a=bits, bits_w=bits)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ua) @ np.asarray(uw))
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 8))
+@settings(**SETTINGS)
+def test_quant_dequant_bounded(seed, bits):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(7, 9)).astype(np.float32) * 10)
+    q = quantize(x, bits)
+    err = jnp.abs(dequantize(q) - x)
+    assert float(jnp.max(err)) <= float(jnp.max(0.5 * q.scale)) + 1e-5
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_offset_binary_identity(seed):
+    rng = np.random.default_rng(seed)
+    qa = jnp.asarray(rng.integers(-127, 128, size=(3, 8)).astype(np.int32))
+    qw = jnp.asarray(rng.integers(-127, 128, size=(8, 4)).astype(np.int32))
+    ua, uw = to_offset_binary(qa), to_offset_binary(qw)
+    got = ua @ uw - signed_product_correction(ua, uw)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(qa) @ np.asarray(qw))
+
+
+@given(st.integers(0, 255))
+@settings(**SETTINGS)
+def test_bitplane_roundtrip_prop(v):
+    u = jnp.full((3,), v, jnp.int32)
+    assert int(from_bitplanes(to_bitplanes(u))[0]) == v
+
+
+@given(st.integers(0, 8))
+@settings(max_examples=9, deadline=None)
+def test_energy_monotone_and_mc_mean_tracks(k):
+    e = np.asarray(
+        jnp.stack([jnp.float32(0)] if k == 0 else
+                  [mc_energy_fj(jax.random.key(1), k, 4000).mean()]))
+    lut = C.E_MAC_TABLE_FJ[k]
+    if k > 0:
+        # MC mean stays within 10% of the (mu_g-shifted) table energy
+        assert abs(float(e[0]) - (C.E_MAC_TABLE_FJ[0] + C.MC_MU_G *
+                                  (lut - C.E_MAC_TABLE_FJ[0]))) < 0.1 * lut
+
+
+@given(st.floats(0.0, 8.0))
+@settings(**SETTINGS)
+def test_voltage_monotone_in_fractional_k(k):
+    v1 = float(rbl_voltage(jnp.float32(k), mode="physics"))
+    v2 = float(rbl_voltage(jnp.float32(k + 0.25), mode="physics"))
+    assert v2 < v1
