@@ -1,9 +1,13 @@
 """IMC fabric projection + kernel-path throughput (paper §III-F made
-quantitative, plus the TPU-side exact path).
+quantitative, plus the TPU-side exact path and the sim-path engine race).
 
 Projects transformer-layer GEMMs onto a sea of 8x8 macros using the
-paper-calibrated energy/latency model, and times the exact digital-equivalent
-path (imc_matmul / Pallas kernel in interpret mode) on CPU.
+paper-calibrated energy/latency model, times the exact digital-equivalent
+path, and races the hardware-faithful sim engines: the seed per-plane-pair
+LOOP (64 einsum+decode rounds) vs the plane-batched FUSED engine (one
+contraction + one vectorized decode) vs the fused Pallas kernel (oracle
+interpret mode on CPU).  Every function takes ``smoke=True`` for the reduced
+CI matrix.
 """
 from __future__ import annotations
 
@@ -14,15 +18,18 @@ import numpy as np
 from benchmarks.common import row, time_fn
 from repro.core.energy import fabric_matmul_cost
 from repro.core.imc_matmul import imc_matmul
+from repro.core.quant import quantize, to_offset_binary
 
 
-def fabric_projection():
+def fabric_projection(smoke: bool = False):
     rows = []
     cases = [
         ("mlp_768x3072", 512, 768, 3072),  # imc-paper-110m MLP
         ("attn_qkv_2048", 512, 2048, 2048),  # qwen2.5-3b projection
         ("expert_ffn_qwen3moe", 512, 2048, 768),  # one expert GEMM
     ]
+    if smoke:
+        cases = cases[:1]
     for name, m, k, n in cases:
         for macros in (1, 4096, 65536):
             rep = fabric_matmul_cost(m, k, n, n_macros=macros)
@@ -37,23 +44,75 @@ def fabric_projection():
     return rows
 
 
-def exact_path_throughput():
+def exact_path_throughput(smoke: bool = False):
     rows = []
     rng = np.random.default_rng(0)
-    for m, k, n in [(256, 512, 512), (512, 1024, 1024)]:
+    shapes = [(256, 512, 512), (512, 1024, 1024)]
+    iters = 10
+    if smoke:
+        shapes, iters = [(128, 256, 256)], 3
+    for m, k, n in shapes:
         x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
         w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
         f = jax.jit(lambda x, w: imc_matmul(x, w, bits=8, mode="exact"))
-        us, _ = time_fn(f, x, w, iters=10)
+        us, _ = time_fn(f, x, w, iters=iters)
         flops = 2 * m * k * n
         rows.append(row(f"imc_exact/xla_{m}x{k}x{n}", us,
                         f"{flops/(us*1e-6)/1e9:.1f}GFLOP/s-int8-equiv"))
         fk = jax.jit(lambda x, w: imc_matmul(x, w, bits=8, mode="exact",
                                              use_kernel=True))
-        us_k, _ = time_fn(fk, x, w, iters=3)
+        us_k, _ = time_fn(fk, x, w, iters=min(iters, 3))
         rows.append(row(f"imc_exact/pallas_interp_{m}x{k}x{n}", us_k,
-                        "interpret=True (CPU oracle-mode, not perf)"))
+                        "interpret=True (CPU oracle-mode; not perf)"))
     return rows
 
 
-ALL = [fabric_projection, exact_path_throughput]
+def sim_path_throughput(smoke: bool = False):
+    """Engine race on the hardware-faithful sim path: loop vs fused.
+
+    ``sim_loop``  — seed per-plane-pair engine: bits^2 einsum+decode rounds.
+    ``sim_fused`` — plane-batched engine: ONE batched contraction + ONE
+                    vectorized decode + weighted accumulate (the default
+                    ``imc_matmul(mode="sim")`` path).
+    ``sim_pallas``— the fully fused bitplane_mac kernel, interpret mode on
+                    CPU (correctness oracle, not a perf number off-TPU).
+    """
+    from repro.core.bitserial import (bitserial_matmul_looped,
+                                      bitserial_matmul_unsigned)
+    from repro.kernels.bitplane_mac.ops import bitplane_mac
+
+    rows = []
+    rng = np.random.default_rng(1)
+    bits = 8
+    shapes = [(64, 256, 128), (128, 512, 256)]
+    iters = 5
+    if smoke:
+        shapes, iters = [(32, 128, 64)], 3
+    for m, k, n in shapes:
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        ua = to_offset_binary(quantize(x, bits).q, bits)
+        uw = to_offset_binary(quantize(w, bits, axis=0).q, bits)
+        floop = jax.jit(lambda a, b: bitserial_matmul_looped(
+            a, b, bits_a=bits, bits_w=bits, mode="sim"))
+        us_loop, out_loop = time_fn(floop, ua, uw, iters=iters)
+        rows.append(row(f"imc_sim/loop_{m}x{k}x{n}", us_loop,
+                        f"{bits * bits} einsum+decode rounds (seed engine)"))
+        ffused = jax.jit(lambda a, b: bitserial_matmul_unsigned(
+            a, b, bits_a=bits, bits_w=bits, mode="sim"))
+        us_fused, out_fused = time_fn(ffused, ua, uw, iters=iters)
+        assert np.array_equal(np.asarray(out_loop), np.asarray(out_fused))
+        rows.append(row(f"imc_sim/fused_{m}x{k}x{n}", us_fused,
+                        f"plane-batched engine; {us_loop/us_fused:.2f}x vs "
+                        "loop"))
+        if (m, k, n) == shapes[0]:
+            fker = jax.jit(lambda a, b: bitplane_mac(
+                a, b, bits_a=bits, bits_w=bits))
+            us_ker, out_ker = time_fn(fker, ua, uw, iters=2, warmup=1)
+            assert np.array_equal(np.asarray(out_loop), np.asarray(out_ker))
+            rows.append(row(f"imc_sim/pallas_interp_{m}x{k}x{n}", us_ker,
+                            "interpret=True (CPU oracle-mode; not perf)"))
+    return rows
+
+
+ALL = [fabric_projection, exact_path_throughput, sim_path_throughput]

@@ -1,23 +1,45 @@
 """Benchmark runner: one function per paper table/figure + framework benches.
 
-Prints ``name,us_per_call,derived`` CSV.  Roofline rows appear when dry-run
-records exist under experiments/dryrun/.
+Prints ``name,us_per_call,derived`` CSV (optionally teeing to ``--out`` for CI
+artifact upload).  ``--smoke`` runs the reduced matrix — small shapes, fewer
+iterations — so a CPU CI runner finishes in a couple of minutes while still
+seeding the perf trajectory.  Roofline rows appear when dry-run records exist
+under experiments/dryrun/.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 
-def main() -> None:
+
+def _rows_from(fn, smoke: bool):
+    if "smoke" in inspect.signature(fn).parameters:
+        return fn(smoke=smoke)
+    return fn()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced bench matrix (CI smoke; seeds perf CSV)")
+    ap.add_argument("--out", default=None,
+                    help="also write the CSV to this path")
+    args = ap.parse_args(argv)
+
     from benchmarks import bench_imc_throughput, bench_paper_tables, roofline
 
-    print("name,us_per_call,derived")
-    for fn in bench_paper_tables.ALL:
-        for r in fn():
-            print(r, flush=True)
-    for fn in bench_imc_throughput.ALL:
-        for r in fn():
+    lines = ["name,us_per_call,derived"]
+    print(lines[0])
+    for fn in (*bench_paper_tables.ALL, *bench_imc_throughput.ALL):
+        for r in _rows_from(fn, args.smoke):
+            lines.append(r)
             print(r, flush=True)
     for r in roofline.csv_rows(roofline.load()):
+        lines.append(r)
         print(r, flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(lines) + "\n")
 
 
 if __name__ == "__main__":

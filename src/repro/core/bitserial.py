@@ -14,9 +14,24 @@ digitally.  Two paths:
   * sim    — per-group counts go through the analog path (voltage model ->
              thermometer decode), optionally with mismatch noise; this is the
              hardware-faithful emulation.
+
+The engine is **plane-batched**: all ``bits_a x bits_w`` bit-plane pairs are
+stacked into a leading batch axis, the group counts come out of ONE batched
+contraction, the analog decode runs in ONE vectorized pass, and the final
+shift-accumulate is a dot with a precomputed ``2^(p+q)`` weight vector.  The
+seed's per-plane-pair Python loop survives as
+:func:`bitserial_matmul_looped` — it is the bit-exact reference the batched
+engine (and the fused Pallas kernel in ``repro.kernels.bitplane_mac``) are
+tested against, dispatching 64 separate einsum+decode rounds instead of one.
+
+PRNG discipline: plane pair ``(p, q)`` always consumes
+``fold_in(key, p * bits_w + q)``, in the loop AND in the batch (where the
+folded keys ride the plane axis through ``vmap``), so both engines draw
+identical noise.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import constants as C
@@ -36,7 +51,7 @@ def _pad_to_groups(x, axis, rows):
 
 
 def group_counts(a_bits, w_bits, rows: int = C.ROWS):
-    """Per-group binary MAC counts.
+    """Per-group binary MAC counts for ONE bit-plane pair.
 
     a_bits: uint8[..., K] RWL activation bits; w_bits: uint8[K, N] stored bits.
     Returns int32[..., G, N] counts with G = ceil(K/rows).
@@ -48,6 +63,75 @@ def group_counts(a_bits, w_bits, rows: int = C.ROWS):
     w = w.reshape((g, rows) + w.shape[1:])
     # counts[..., g, n] = sum_r a[..., g, r] * w[g, r, n]
     return jnp.einsum("...gr,grn->...gn", a, w)
+
+
+def batched_group_counts(a_planes, w_planes, rows: int = C.ROWS):
+    """Group counts for ALL plane pairs in one contraction.
+
+    a_planes: uint8[PA, ..., K]; w_planes: uint8[PW, K, N].
+    Returns int32[PA*PW, ..., G, N], pair axis ordered i = p * PW + q.
+    """
+    a = _pad_to_groups(a_planes.astype(jnp.int32), -1, rows)
+    w = _pad_to_groups(w_planes.astype(jnp.int32), 1, rows)
+    pa, pw = a.shape[0], w.shape[0]
+    g = a.shape[-1] // rows
+    a = a.reshape(a.shape[:-1] + (g, rows))
+    w = w.reshape((pw, g, rows) + w.shape[2:])
+    # counts[p, q, ..., g, n] = sum_r a[p, ..., g, r] * w[q, g, r, n]
+    counts = jnp.einsum("p...gr,qgrn->pq...gn", a, w)
+    return counts.reshape((pa * pw,) + counts.shape[2:])
+
+
+def fused_group_counts(a_planes, w_planes, rows: int = C.ROWS):
+    """All plane-pair group counts as ONE G-batched GEMM, GEMM-friendly layout.
+
+    a_planes: uint8[PA, M, K]; w_planes: uint8[PW, K, N].
+    Returns int32[G, PA*M, PW*N]: per K-group, the (PA*M) x (PW*N) count
+    matrix — every plane pair rides the GEMM's free dimensions, so the whole
+    pyramid is one well-shaped contraction instead of PA*PW small ones, and
+    the result needs NO transpose before the (elementwise) decode.
+    """
+    a = _pad_to_groups(a_planes.astype(jnp.int32), -1, rows)
+    w = _pad_to_groups(w_planes.astype(jnp.int32), 1, rows)
+    pa, m, k = a.shape
+    pw, _, n = w.shape
+    g = k // rows
+    a = a.reshape(pa * m, g, rows)
+    w = w.transpose(1, 0, 2).reshape(g, rows, pw * n)
+    # counts[g, pm, qn] = sum_r a[pm, g, r] * w[g, r, qn]
+    return jax.lax.dot_general(a, w, (((2,), (1,)), ((1,), (0,))),
+                               preferred_element_type=jnp.int32)
+
+
+def _decode_counts_inline(counts, *, rows: int, rbl_mode: str):
+    """Noise-free analog decode without materializing the thermometer axis.
+
+    Same comparisons as ``decoder.thermometer_code`` (count = #thresholds
+    >= V, references descending), but accumulated across a static unroll of
+    the ``rows`` comparators, so peak memory stays one counts-sized buffer
+    instead of counts x rows.  Bit-identical to ``decode_voltage``.
+    """
+    from repro.core.decoder import thresholds as _thresholds
+
+    v = rbl_voltage(counts.astype(jnp.float32), rows=rows, mode=rbl_mode)
+    thr = _thresholds(rows, mode=rbl_mode)
+    dec = jnp.zeros(v.shape, jnp.int32)
+    for i in range(rows):  # static unroll: rows is small (8)
+        dec = dec + (v <= thr[i]).astype(jnp.int32)
+    return dec
+
+
+def plane_pair_weights(bits_a: int, bits_w: int):
+    """int32[bits_a * bits_w] shift weights 2^(p+q), i = p * bits_w + q."""
+    p = jnp.arange(bits_a, dtype=jnp.int32)[:, None]
+    q = jnp.arange(bits_w, dtype=jnp.int32)[None, :]
+    return (jnp.int32(1) << (p + q)).reshape(-1)
+
+
+def fold_plane_keys(key, n_pairs: int):
+    """Per-plane-pair keys: keys[i] == fold_in(key, i) (the loop's schedule)."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n_pairs, dtype=jnp.uint32))
 
 
 def decode_group_counts(counts, *, mode: str = "exact", rows: int = C.ROWS,
@@ -68,7 +152,6 @@ def decode_group_counts(counts, *, mode: str = "exact", rows: int = C.ROWS,
         if key is None:
             raise ValueError("sim with noise requires a PRNG key")
     if mismatch:
-        import jax
         key, nkey = jax.random.split(key)
         k_eff = k_eff + mc_count_noise(nkey, counts.shape, counts)
         ckey = key
@@ -80,17 +163,84 @@ def decode_group_counts(counts, *, mode: str = "exact", rows: int = C.ROWS,
                           key=ckey)
 
 
+def _weighted_plane_sum(dec, weights):
+    """sum_i weights[i] * sum_g dec[i, ..., g, n] -> [..., n] (int32)."""
+    group_sums = jnp.sum(dec, axis=-2)  # [PP, ..., N]
+    return jnp.tensordot(weights, group_sums, axes=(0, 0))
+
+
 def bitserial_matmul_unsigned(u_a, u_w, *, bits_a: int = 8, bits_w: int = 8,
                               rows: int = C.ROWS, mode: str = "exact",
                               **decode_kw):
-    """Unsigned bit-serial matmul via per-group decoded MAC counts.
+    """Unsigned bit-serial matmul — plane-batched engine.
 
     u_a: int32[..., K] in [0, 2^bits_a); u_w: int32[K, N) likewise.
     Returns int32[..., N] == u_a @ u_w when mode="exact".
+
+    Noise-free (exact, or sim without mismatch/comparator noise): planes ride
+    the free dimensions of ONE G-batched GEMM (:func:`fused_group_counts`),
+    the analog decode runs inline without materializing the thermometer axis,
+    and the ``2^(p+q)`` shift-accumulate is a single weighted reduction.
+
+    Noisy sim: per-pair counts from :func:`batched_group_counts` go through
+    the modular decode under ``vmap``, with the caller's key folded per plane
+    pair INSIDE the batch — drawing the very same samples as
+    :func:`bitserial_matmul_looped`.
     """
     from repro.core.quant import to_bitplanes
 
-    import jax
+    base_key = decode_kw.pop("key", None)
+    noisy = mode == "sim" and (
+        decode_kw.get("mismatch") or
+        decode_kw.get("comparator_offset_sigma") is not None)
+    if noisy:
+        if base_key is None:
+            raise ValueError("sim with noise requires a PRNG key")
+        a_planes = to_bitplanes(u_a, bits_a)  # [PA, ..., K]
+        w_planes = to_bitplanes(u_w, bits_w)  # [PW, K, N]
+        counts = batched_group_counts(a_planes, w_planes, rows)
+        keys = fold_plane_keys(base_key, bits_a * bits_w)
+        dec = jax.vmap(
+            lambda c, k: decode_group_counts(c, rows=rows, mode=mode, key=k,
+                                             **decode_kw))(counts, keys)
+        return _weighted_plane_sum(dec, plane_pair_weights(bits_a, bits_w))
+    # noise-free fused engine
+    decode_kw.pop("mismatch", None)
+    decode_kw.pop("comparator_offset_sigma", None)
+    rbl_mode = decode_kw.pop("rbl_mode", "lut")
+    if decode_kw:
+        raise TypeError(f"unknown decode kwargs: {sorted(decode_kw)}")
+    batch = u_a.shape[:-1]
+    k, n = u_a.shape[-1], u_w.shape[-1]
+    m = 1
+    for b in batch:
+        m *= b
+    a_planes = to_bitplanes(u_a.reshape(m, k), bits_a)  # [PA, M, K]
+    w_planes = to_bitplanes(u_w, bits_w)                # [PW, K, N]
+    counts = fused_group_counts(a_planes, w_planes, rows)  # [G, PA*M, PW*N]
+    if mode == "exact":
+        dec = jnp.clip(counts, 0, rows)
+    elif mode == "sim":
+        dec = _decode_counts_inline(counts, rows=rows, rbl_mode=rbl_mode)
+    else:
+        raise ValueError(mode)
+    dec = dec.reshape(counts.shape[0], bits_a, m, bits_w, n)
+    wmat = plane_pair_weights(bits_a, bits_w).reshape(bits_a, bits_w)
+    out = jnp.einsum("gpmqn,pq->mn", dec, wmat)
+    return out.reshape(*batch, n)
+
+
+def bitserial_matmul_looped(u_a, u_w, *, bits_a: int = 8, bits_w: int = 8,
+                            rows: int = C.ROWS, mode: str = "exact",
+                            **decode_kw):
+    """Seed reference engine: one einsum + decode per plane pair.
+
+    Bit-identical to :func:`bitserial_matmul_unsigned` (including noise draws)
+    but dispatches ``bits_a * bits_w`` separate rounds — kept as the oracle
+    for the batched engine and the fused kernel, and as the loop baseline in
+    ``benchmarks/bench_imc_throughput.py``.
+    """
+    from repro.core.quant import to_bitplanes
 
     a_planes = to_bitplanes(u_a, bits_a)  # [PA, ..., K]
     w_planes = to_bitplanes(u_w, bits_w)  # [PW, K, N]

@@ -8,7 +8,9 @@ Backward: straight-through estimator — gradients flow as if the layer were the
 underlying float matmul (standard QAT practice), so the same module is usable
 in training AND serving.  ``mode="sim"`` additionally pushes the forward
 through the analog decode path (group-wise, with optional noise) for
-hardware-in-the-loop robustness studies.
+hardware-in-the-loop robustness studies; ``mode="sim", use_kernel=True``
+runs the whole bit-plane pyramid as one fused Pallas launch
+(:mod:`repro.kernels.bitplane_mac`) instead of 64 einsum+decode rounds.
 """
 from __future__ import annotations
 

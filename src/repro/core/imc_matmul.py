@@ -10,8 +10,14 @@ This is the paper's technique packaged as a drop-in GEMM:
   * mode="sim"    — hardware-faithful emulation: offset-binary bit-planes,
                     per-8-row-group charge-sharing voltage, comparator
                     thermometer decode, optional device mismatch + comparator
-                    offset noise (:mod:`repro.kernels.rbl_decode` is the
-                    kernelized version of the inner loop).
+                    offset noise.  Runs on the plane-batched engine
+                    (:mod:`repro.core.bitserial`); with ``use_kernel=True``
+                    the noise-free pyramid is ONE fused Pallas launch
+                    (:mod:`repro.kernels.bitplane_mac` — all plane pairs x
+                    K-groups x RBL voltage x comparator decode x weighted
+                    accumulate).  Noisy sims (PRNG-keyed mismatch/comparator
+                    offset) stay on the plane-batched jnp path, which folds
+                    the key per plane pair inside the batch.
 
 Both return float outputs plus an optional hardware cost report
 (:class:`repro.core.energy.FabricReport`).
@@ -58,10 +64,16 @@ def imc_matmul(x, w, *, bits: int = 8, mode: str = "exact",
     elif mode == "sim":
         u_a = to_offset_binary(qx.q, bits)
         u_w = to_offset_binary(qw.q, bits)
-        uu = bitserial_matmul_unsigned(
-            u_a, u_w, bits_a=bits, bits_w=bits, rows=rows, mode="sim",
-            key=key, mismatch=mismatch,
-            comparator_offset_sigma=comparator_offset_sigma)
+        noisy = mismatch or comparator_offset_sigma is not None
+        if use_kernel and not noisy:
+            from repro.kernels.bitplane_mac.ops import bitplane_mac
+
+            uu = bitplane_mac(u_a, u_w, bits_a=bits, bits_w=bits, rows=rows)
+        else:
+            uu = bitserial_matmul_unsigned(
+                u_a, u_w, bits_a=bits, bits_w=bits, rows=rows, mode="sim",
+                key=key, mismatch=mismatch,
+                comparator_offset_sigma=comparator_offset_sigma)
         acc = uu - signed_product_correction(u_a, u_w, bits)
     else:
         raise ValueError(mode)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: the FULL bit-plane pyramid MAC in one pallas_call.
+
+Generalizes ``repro.kernels.rbl_decode`` from one bit-plane pair to all
+``bits_a x bits_w`` pairs: per output tile the kernel sweeps plane pairs and
+K-blocks, and for every (pair, K-block) it runs the paper's whole evaluation
+pipeline — per-8-row-group binary MAC counts, charge-sharing RBL voltage,
+comparator thermometer decode, and the ``2^(p+q)``-weighted digital
+shift-accumulate — without leaving VMEM:
+
+  out[m, n] = sum_{p,q} 2^{p+q} sum_g decode( V( sum_r a[p, m, g*rows+r]
+                                                   * w[q, g*rows+r, n] ) )
+
+The decode is algebraically the identity for noise-free counts, so the result
+is bit-identical to the plane-batched jnp engine AND the seed per-plane loop
+(``core/bitserial.py``); the point is that the 64-round einsum+decode pyramid
+becomes ONE kernel launch with a single int32 accumulator per tile.
+
+Implementation notes (TPU adaptation):
+  * grid (M/bm, N/bn, PP, K/bk) with the plane-pair axis PP = bits_a * bits_w
+    third and K innermost; both are "arbitrary" (they carry the accumulator),
+    M/N tiles are parallel.
+  * the index maps recover (p, q) from the flat pair index by div/mod, so the
+    activation planes tensor [PA, M, K] and the weight planes tensor
+    [PW, K, N] are streamed block-by-block — VMEM never holds more than one
+    (bm, bk) + (bk, bn) plane slice.
+  * group MACs are a G-batched (bm, rows) x (rows, bn) dot_general as in
+    rbl_decode; V(k) is the fitted two-regime physics on the VPU; the
+    comparator bank is ``rows`` broadcast compares.
+  * the plane weight 2^(p+q) is computed from ``pl.program_id`` on the fly
+    (shift of an int32 one), and accumulation is int32 — float32 would lose
+    bit-exactness beyond 2^24 for deep-K 8-bit operands.
+  * thresholds arrive as a (1, rows) block so corner-re-tuned references
+    (paper §IV-C) stay a data, not code, change.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import constants as C
+from repro.kernels.common import decode_counts
+from repro.kernels.compat import compiler_params
+
+
+def _make_kernel(rows: int, bk: int, bits_w: int):
+    groups = bk // rows
+
+    def kernel(a_ref, b_ref, thr_ref, o_ref, acc_ref):
+        pp = pl.program_id(2)
+        kk = pl.program_id(3)
+
+        @pl.when((pp == 0) & (kk == 0))
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        bm = a_ref.shape[1]
+        bn = b_ref.shape[2]
+        a = a_ref[0].astype(jnp.float32).reshape(bm, groups, rows)
+        b = b_ref[0].astype(jnp.float32).reshape(groups, rows, bn)
+        # counts[g, m, n] = sum_r a[m, g, r] * b[g, r, n]
+        counts = jax.lax.dot_general(
+            a, b, (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32)
+        dec = decode_counts(counts, thr_ref[...], rows)
+        # digital shift-accumulate: weight = 2^(p+q), pair index pp = p*PW + q
+        shift = pp // bits_w + pp % bits_w
+        weight = jax.lax.shift_left(jnp.int32(1), shift)
+        acc_ref[...] += weight * jnp.sum(dec, axis=0).astype(jnp.int32)
+
+        @pl.when((pp == pl.num_programs(2) - 1)
+                 & (kk == pl.num_programs(3) - 1))
+        def _flush():
+            o_ref[...] = acc_ref[...]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "bm", "bn", "bk",
+                                             "interpret"))
+def bitplane_mac_raw(a_planes, w_planes, thresholds, *, rows: int = C.ROWS,
+                     bm: int = 128, bn: int = 128, bk: int = 256,
+                     interpret: bool = False):
+    """Fused full-pyramid decode MAC.
+
+    a_planes: int8[PA, M, K] in {0,1} (activation bit-planes, LSB first);
+    w_planes: int8[PW, K, N] in {0,1}; thresholds: float32[rows] descending.
+    M, N, K must be divisible by (bm, bn, bk) and bk by rows (ops.py pads).
+    Returns int32[M, N] = sum_{p,q} 2^(p+q) * sum_g decoded_count[p, q, g].
+    """
+    pa, m, k = a_planes.shape
+    pw, k2, n = w_planes.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert bk % rows == 0
+    grid = (m // bm, n // bn, pa * pw, k // bk)
+    return pl.pallas_call(
+        _make_kernel(rows, bk, pw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda i, j, pp, kk: (pp // pw, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda i, j, pp, kk: (pp % pw, kk, j)),
+            pl.BlockSpec((1, rows), lambda i, j, pp, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, pp, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(a_planes.astype(jnp.int8), w_planes.astype(jnp.int8),
+      jnp.asarray(thresholds, jnp.float32).reshape(1, rows))

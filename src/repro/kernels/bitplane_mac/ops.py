@@ -1,0 +1,56 @@
+"""jit'd public wrapper for the bitplane_mac kernel (planes, padding, thr).
+
+Takes *unsigned multi-bit* operands (offset-binary ints, the same contract as
+``core.bitserial.bitserial_matmul_unsigned``), explodes them into bit-planes,
+pads every axis to the kernel's block grid, and unpads the result.  Zero
+padding is safe end-to-end: a zero bit contributes count 0 and the noise-free
+decode maps 0 -> 0, so padded groups add nothing to the accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants as C
+from repro.core.decoder import thresholds as core_thresholds
+from repro.core.quant import to_bitplanes
+from repro.kernels.bitplane_mac.bitplane_mac import bitplane_mac_raw
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bits_a", "bits_w", "rows",
+                                             "bm", "bn", "bk", "interpret"))
+def bitplane_mac(u_a, u_w, thr=None, *, bits_a: int = 8, bits_w: int = 8,
+                 rows: int = C.ROWS, bm: int = 128, bn: int = 128,
+                 bk: int = 256, interpret: bool | None = None):
+    """Fused full-pyramid bit-serial matmul for arbitrary shapes.
+
+    u_a: int[..., K] in [0, 2^bits_a); u_w: int[K, N) likewise.  Leading batch
+    dims of ``u_a`` flatten into M.  ``thr`` defaults to the physics-model
+    comparator references for ``rows`` (re-tunable, paper §IV-C).
+    Returns int32[..., N] == u_a @ u_w (noise-free decode is exact).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if thr is None:
+        thr = core_thresholds(rows, mode="physics")
+    batch = u_a.shape[:-1]
+    m = 1
+    for b in batch:
+        m *= b
+    k = u_a.shape[-1]
+    n = u_w.shape[-1]
+    a_planes = to_bitplanes(u_a.reshape(m, k), bits_a)  # [PA, M, K]
+    w_planes = to_bitplanes(u_w, bits_w)                # [PW, K, N]
+    pm, pk, pn = (-m) % bm, (-k) % bk, (-n) % bn
+    if pm or pk:
+        a_planes = jnp.pad(a_planes, ((0, 0), (0, pm), (0, pk)))
+    if pk or pn:
+        w_planes = jnp.pad(w_planes, ((0, 0), (0, pk), (0, pn)))
+    out = bitplane_mac_raw(a_planes, w_planes, thr, rows=rows, bm=bm, bn=bn,
+                           bk=bk, interpret=interpret)
+    return out[:m, :n].reshape(*batch, n)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the bitplane_mac kernel (built on repro.core).
+
+Two references, deliberately different engines:
+
+  * :func:`bitplane_mac_ref`        — the SEED per-plane-pair loop
+    (``bitserial_matmul_looped``), 64 einsum+decode rounds.
+  * :func:`bitplane_mac_batched_ref`— the plane-batched jnp engine
+    (``bitserial_matmul_unsigned``), one contraction + one decode.
+
+Both run the analog path with the two-regime physics voltage model (what the
+kernel evaluates in-register); noise-free they are bit-identical to each
+other and to the kernel.
+"""
+from __future__ import annotations
+
+from repro.core import constants as C
+from repro.core.bitserial import (bitserial_matmul_looped,
+                                  bitserial_matmul_unsigned)
+
+
+def bitplane_mac_ref(u_a, u_w, *, bits_a: int = 8, bits_w: int = 8,
+                     rows: int = C.ROWS):
+    """Seed-loop oracle: per-plane-pair einsum + physics-mode analog decode."""
+    return bitserial_matmul_looped(u_a, u_w, bits_a=bits_a, bits_w=bits_w,
+                                   rows=rows, mode="sim", rbl_mode="physics")
+
+
+def bitplane_mac_batched_ref(u_a, u_w, *, bits_a: int = 8, bits_w: int = 8,
+                             rows: int = C.ROWS):
+    """Plane-batched oracle: one batched contraction + vectorized decode."""
+    return bitserial_matmul_unsigned(u_a, u_w, bits_a=bits_a, bits_w=bits_w,
+                                     rows=rows, mode="sim", rbl_mode="physics")

@@ -1,0 +1,32 @@
+"""Shared in-kernel analog-path helpers for the Pallas IMC kernels.
+
+``rbl_decode`` (one bit-plane pair) and ``bitplane_mac`` (the full pyramid)
+evaluate the identical decode stage in-register; keeping it here means a
+threshold tie-break fix or physics recalibration lands in both kernels at
+once.  Pure jnp on values (not refs), so it is safe inside kernel bodies and
+in interpret mode alike.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import constants as C
+
+
+def decode_counts(k_float, thr, rows: int):
+    """Counts -> V_RBL (two-regime physics) -> comparator decode -> counts.
+
+    ``thr`` is a (1, rows) block of descending comparator references;
+    count = number of thresholds >= V, matching ``decoder.decode_voltage``.
+    """
+    u = C.U_LIN * (C.ROWS / rows)
+    x = k_float * u
+    lin = C.V0_LEAK - x
+    x_tri = jnp.maximum(x - (C.V0_LEAK - C.VD_SAT), 0.0)
+    tri = C.VD_SAT * jnp.exp(-x_tri / C.VD_SAT)
+    v = jnp.where(lin >= C.VD_SAT, lin, tri)
+    # comparator bank: count = number of thresholds >= V (thr descending)
+    dec = jnp.zeros_like(k_float)
+    for i in range(rows):  # static unroll: rows is small (8)
+        dec = dec + (v <= thr[0, i]).astype(jnp.float32)
+    return dec

@@ -1,0 +1,42 @@
+"""Version-compat shims for Pallas TPU API drift.
+
+The Pallas TPU namespace renamed several symbols across jax releases
+(``TPUCompilerParams`` -> ``CompilerParams``, and the older
+``dimension_semantics=`` kwarg moved between positional conventions).  Every
+kernel in this repo goes through this module instead of touching
+``pltpu.CompilerParams`` directly, so a jax upgrade is a one-file change.
+
+Resolved at import time (cheap, and failures surface immediately):
+
+  * :data:`CompilerParams`  — the compiler-params class for ``pallas_call``.
+  * :func:`compiler_params` — build a params object from keyword arguments,
+    dropping kwargs the installed class does not know about (forward/backward
+    tolerant).
+"""
+from __future__ import annotations
+
+import inspect
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.7 exposes ``CompilerParams``; 0.4.x-0.6.x call it
+# ``TPUCompilerParams``.  Resolve whichever exists.
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+elif hasattr(pltpu, "TPUCompilerParams"):
+    CompilerParams = pltpu.TPUCompilerParams
+else:  # pragma: no cover - ancient jax; kernels would not work anyway
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is unsupported")
+
+_ACCEPTED = frozenset(inspect.signature(CompilerParams).parameters)
+
+
+def compiler_params(**kw):
+    """``CompilerParams(**kw)`` with unknown kwargs silently dropped.
+
+    Lets call-sites pass the superset of tuning knobs they want; whatever the
+    installed jax supports takes effect.
+    """
+    return CompilerParams(**{k: v for k, v in kw.items() if k in _ACCEPTED})

@@ -32,21 +32,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import constants as C
-
-
-def _decode_counts(k_float, thr, rows: int):
-    """Counts -> V_RBL (two-regime physics) -> comparator decode -> counts."""
-    u = C.U_LIN * (C.ROWS / rows)
-    x = k_float * u
-    lin = C.V0_LEAK - x
-    x_tri = jnp.maximum(x - (C.V0_LEAK - C.VD_SAT), 0.0)
-    tri = C.VD_SAT * jnp.exp(-x_tri / C.VD_SAT)
-    v = jnp.where(lin >= C.VD_SAT, lin, tri)
-    # comparator bank: count = number of thresholds >= V (thr descending)
-    dec = jnp.zeros_like(k_float)
-    for i in range(rows):  # static unroll: rows is small (8)
-        dec = dec + (v <= thr[0, i]).astype(jnp.float32)
-    return dec
+from repro.kernels.common import decode_counts
+from repro.kernels.compat import compiler_params
 
 
 def _make_kernel(rows: int, bk: int):
@@ -65,7 +52,7 @@ def _make_kernel(rows: int, bk: int):
         counts = jax.lax.dot_general(
             a, b, (((2,), (1,)), ((1,), (0,))),
             preferred_element_type=jnp.float32)
-        dec = _decode_counts(counts, thr_ref[...], rows)
+        dec = decode_counts(counts, thr_ref[...], rows)
         acc_ref[...] += jnp.sum(dec, axis=0)
 
         @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
@@ -103,7 +90,7 @@ def rbl_decode_mac_raw(a_bits, w_bits, thresholds, *, rows: int = C.ROWS,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_bits.astype(jnp.int8), w_bits.astype(jnp.int8),

@@ -11,7 +11,6 @@ compiled executable (no recompiles at steady state).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import List, Optional

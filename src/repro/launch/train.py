@@ -9,7 +9,6 @@ and up to the production mesh (same code path the dry-run lowers).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

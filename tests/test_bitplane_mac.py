@@ -1,0 +1,203 @@
+"""Plane-batched bit-serial engine + fused bitplane_mac kernel tests.
+
+The contract, in increasing order of fusion:
+
+  seed per-plane loop  ==  plane-batched engine  ==  fused Pallas kernel
+
+bit-exact (noise-free), with the first two ALSO drawing identical PRNG noise
+per plane pair (fold_in(key, p * bits_w + q) inside the batch via vmap).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitserial import (batched_group_counts, bitserial_matmul_looped,
+                                  bitserial_matmul_unsigned, group_counts,
+                                  plane_pair_weights)
+from repro.core.imc_matmul import imc_matmul, int_matmul
+from repro.core.quant import quantize, to_bitplanes, to_offset_binary
+from repro.kernels.bitplane_mac.ops import bitplane_mac
+from repro.kernels.bitplane_mac.ref import (bitplane_mac_batched_ref,
+                                            bitplane_mac_ref)
+
+
+def _mk_unsigned(bits, m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    hi = 1 << bits
+    ua = jnp.asarray(rng.integers(0, hi, size=(m, k)).astype(np.int32))
+    uw = jnp.asarray(rng.integers(0, hi, size=(k, n)).astype(np.int32))
+    return ua, uw
+
+
+# ------------------------------------------------- plane-batched jnp engine
+def test_batched_group_counts_match_per_pair():
+    rng = np.random.default_rng(1)
+    ua, uw = _mk_unsigned(4, 3, 21, 6, seed=1)
+    a_planes = to_bitplanes(ua, 4)
+    w_planes = to_bitplanes(uw, 4)
+    batched = np.asarray(batched_group_counts(a_planes, w_planes))
+    for p in range(4):
+        for q in range(4):
+            ref = np.asarray(group_counts(a_planes[p], w_planes[q]))
+            np.testing.assert_array_equal(batched[p * 4 + q], ref)
+
+
+def test_plane_pair_weights_shift_table():
+    w = np.asarray(plane_pair_weights(3, 2))
+    assert w.tolist() == [1 << (p + q) for p in range(3) for q in range(2)]
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_batched_engine_bitexact_vs_seed_loop_sim(bits):
+    ua, uw = _mk_unsigned(bits, 5, 37, 9, seed=bits)
+    a = bitserial_matmul_unsigned(ua, uw, bits_a=bits, bits_w=bits, mode="sim")
+    b = bitserial_matmul_looped(ua, uw, bits_a=bits, bits_w=bits, mode="sim")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_batched_engine_exact_mode_telescopes_to_int_matmul(bits):
+    ua, uw = _mk_unsigned(bits, 4, 29, 7, seed=10 + bits)
+    out = bitserial_matmul_unsigned(ua, uw, bits_a=bits, bits_w=bits,
+                                    mode="exact")
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ua) @ np.asarray(uw))
+
+
+def test_mixed_precision_planes():
+    ua, uw = _mk_unsigned(6, 3, 17, 5, seed=3)
+    uw = uw % (1 << 4)
+    out = bitserial_matmul_unsigned(ua, uw, bits_a=6, bits_w=4, mode="sim")
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ua) @ np.asarray(uw))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_batched_engine_mismatch_noise_matches_loop_keys(bits):
+    """Per-plane-pair fold_in inside the batch == the loop's key schedule."""
+    ua, uw = _mk_unsigned(bits, 4, 33, 6, seed=20 + bits)
+    key = jax.random.key(7)
+    a = bitserial_matmul_unsigned(ua, uw, bits_a=bits, bits_w=bits,
+                                  mode="sim", key=key, mismatch=True)
+    b = bitserial_matmul_looped(ua, uw, bits_a=bits, bits_w=bits,
+                                mode="sim", key=key, mismatch=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # different keys must draw different noise somewhere on a big-k problem
+    ua2, uw2 = _mk_unsigned(bits, 16, 256, 16, seed=30)
+    y1 = bitserial_matmul_unsigned(ua2, uw2, bits_a=bits, bits_w=bits,
+                                   mode="sim", key=jax.random.key(0),
+                                   mismatch=True)
+    y2 = bitserial_matmul_unsigned(ua2, uw2, bits_a=bits, bits_w=bits,
+                                   mode="sim", key=jax.random.key(1),
+                                   mismatch=True)
+    assert not np.array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_batched_engine_comparator_offset_matches_loop_keys():
+    ua, uw = _mk_unsigned(4, 4, 24, 5, seed=40)
+    key = jax.random.key(11)
+    a = bitserial_matmul_unsigned(ua, uw, bits_a=4, bits_w=4, mode="sim",
+                                  key=key, comparator_offset_sigma=0.02)
+    b = bitserial_matmul_looped(ua, uw, bits_a=4, bits_w=4, mode="sim",
+                                key=key, comparator_offset_sigma=0.02)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batched_engine_noise_requires_key():
+    ua, uw = _mk_unsigned(4, 2, 16, 3, seed=50)
+    with pytest.raises(ValueError):
+        bitserial_matmul_unsigned(ua, uw, bits_a=4, bits_w=4, mode="sim",
+                                  mismatch=True)
+
+
+# ------------------------------------------------------ fused Pallas kernel
+@pytest.mark.parametrize("bits,m,k,n", [(4, 8, 16, 8), (8, 16, 24, 8),
+                                        (6, 5, 40, 12)])
+def test_bitplane_kernel_bitexact_vs_both_refs(bits, m, k, n):
+    ua, uw = _mk_unsigned(bits, m, k, n, seed=hash((bits, m)) % 2**32)
+    out = bitplane_mac(ua, uw, bits_a=bits, bits_w=bits, interpret=True)
+    ref_loop = bitplane_mac_ref(ua, uw, bits_a=bits, bits_w=bits)
+    ref_batched = bitplane_mac_batched_ref(ua, uw, bits_a=bits, bits_w=bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref_loop))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref_batched))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ua) @ np.asarray(uw))
+
+
+@pytest.mark.slow
+def test_bitplane_kernel_multiblock_ragged():
+    # spans multiple (bm, bn, bk) blocks with ragged remainders everywhere
+    ua, uw = _mk_unsigned(4, 140, 300, 135, seed=60)
+    out = bitplane_mac(ua, uw, bits_a=4, bits_w=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ua) @ np.asarray(uw))
+
+
+def test_bitplane_kernel_batch_dims():
+    rng = np.random.default_rng(70)
+    ua = jnp.asarray(rng.integers(0, 16, size=(2, 3, 40)).astype(np.int32))
+    uw = jnp.asarray(rng.integers(0, 16, size=(40, 6)).astype(np.int32))
+    out = bitplane_mac(ua, uw, bits_a=4, bits_w=4, interpret=True)
+    assert out.shape == (2, 3, 6)
+    ref = np.asarray(ua).reshape(6, 40) @ np.asarray(uw)
+    np.testing.assert_array_equal(np.asarray(out).reshape(6, 6), ref)
+
+
+def test_bitplane_kernel_custom_thresholds_detune():
+    # Shifting every comparator reference up one level (paper §IV-C corner
+    # detuning) must corrupt the decode — proves thresholds are live data.
+    from repro.core.decoder import thresholds as core_thresholds
+
+    ua = jnp.full((8, 16), 3, jnp.int32)
+    uw = jnp.full((16, 8), 3, jnp.int32)
+    good = core_thresholds(8, mode="physics")
+    out_good = bitplane_mac(ua, uw, good, bits_a=2, bits_w=2, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_good),
+                                  np.asarray(ua) @ np.asarray(uw))
+    detuned = jnp.concatenate([jnp.array([1.9]), good[:-1]])
+    out_bad = bitplane_mac(ua, uw, detuned, bits_a=2, bits_w=2,
+                           interpret=True)
+    assert not np.array_equal(np.asarray(out_bad), np.asarray(out_good))
+
+
+# ------------------------------------------------------- imc_matmul wiring
+def test_imc_matmul_sim_fused_kernel_matches_jnp_sim():
+    rng = np.random.default_rng(80)
+    x = jnp.asarray(rng.normal(size=(4, 24)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(24, 8)).astype(np.float32))
+    ys = imc_matmul(x, w, bits=4, mode="sim")
+    yk = imc_matmul(x, w, bits=4, mode="sim", use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(yk))
+    ye = imc_matmul(x, w, bits=4, mode="exact")
+    np.testing.assert_allclose(np.asarray(ye), np.asarray(yk), rtol=1e-6)
+
+
+def test_imc_matmul_sim_kernel_with_noise_falls_back_keyed():
+    # Noisy sims stay on the plane-batched jnp path (keyed), kernel or not.
+    rng = np.random.default_rng(81)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    key = jax.random.key(5)
+    y1 = imc_matmul(x, w, bits=8, mode="sim", key=key, mismatch=True,
+                    use_kernel=True)
+    y2 = imc_matmul(x, w, bits=8, mode="sim", key=key, mismatch=True)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_exact_mode_telescopes_to_int_matmul_quantized():
+    # The full quantize -> offset-binary -> pyramid pipeline in exact mode
+    # equals the plain int8 matmul on the quantized operands.
+    rng = np.random.default_rng(82)
+    x = jnp.asarray(rng.normal(size=(6, 40)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(40, 10)).astype(np.float32))
+    bits = 8
+    qx, qw = quantize(x, bits), quantize(w, bits, axis=0)
+    ua, uw = to_offset_binary(qx.q, bits), to_offset_binary(qw.q, bits)
+    from repro.core.quant import signed_product_correction
+
+    uu = bitserial_matmul_unsigned(ua, uw, bits_a=bits, bits_w=bits,
+                                   mode="exact")
+    acc = uu - signed_product_correction(ua, uw, bits)
+    np.testing.assert_array_equal(np.asarray(acc),
+                                  np.asarray(int_matmul(qx.q, qw.q)))

@@ -10,6 +10,20 @@ from repro.models import decode_step, forward_logits, init_params, loss_fn, pref
 
 B, S = 2, 32
 
+# Heavyweight sweeps (multi-second jit per arch on CPU): slow-marked so the
+# PR tier (-m "not slow") keeps one transformer (qwen2.5-3b) + the paper
+# config as smoke coverage; pushes to main run everything.
+SLOW_ARCHS = frozenset({
+    "recurrentgemma-9b", "gemma3-12b", "musicgen-large", "dbrx-132b",
+    "mamba2-370m", "qwen3-moe-30b-a3b", "llava-next-mistral-7b",
+    "deepseek-coder-33b", "qwen2-72b",
+})
+
+
+def _arch_params(archs):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in SLOW_ARCHS else a
+            for a in archs]
+
 
 def _batch(cfg, key):
     kt, kl, ke = jax.random.split(key, 3)
@@ -22,7 +36,8 @@ def _batch(cfg, key):
     return batch
 
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS + ("imc-paper-110m",))
+@pytest.mark.parametrize("arch",
+                         _arch_params(ASSIGNED_ARCHS + ("imc-paper-110m",)))
 def test_smoke_train_step(arch):
     cfg = reduce_config(get_config(arch))
     params = init_params(jax.random.key(0), cfg)
@@ -42,7 +57,7 @@ def test_smoke_train_step(arch):
     assert np.all(np.isfinite(np.asarray(logits)))
 
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(ASSIGNED_ARCHS))
 def test_smoke_prefill_decode(arch):
     cfg = reduce_config(get_config(arch))
     params = init_params(jax.random.key(0), cfg)
@@ -61,8 +76,9 @@ def test_smoke_prefill_decode(arch):
     assert jax.tree.structure(cache) == jax.tree.structure(cache2)
 
 
-@pytest.mark.parametrize("arch", ["qwen2.5-3b", "gemma3-12b",
-                                  "recurrentgemma-9b", "mamba2-370m"])
+@pytest.mark.parametrize("arch", _arch_params(["qwen2.5-3b", "gemma3-12b",
+                                               "recurrentgemma-9b",
+                                               "mamba2-370m"]))
 def test_decode_matches_full_forward(arch):
     """Greedy decode logits must match teacher-forced full-forward logits."""
     cfg = reduce_config(get_config(arch))

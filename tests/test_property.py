@@ -1,9 +1,16 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+``hypothesis`` is an optional dev dependency — skip (never hard-fail
+collection) when it is absent.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import constants as C
 from repro.core.bitserial import bitserial_matmul_unsigned, group_counts
