@@ -2,12 +2,13 @@
 quantitative, plus the TPU-side exact path and the sim-path engine race).
 
 Projects transformer-layer GEMMs onto a sea of 8x8 macros using the
-paper-calibrated energy/latency model, times the exact digital-equivalent
-path, and races the hardware-faithful sim engines: the seed per-plane-pair
-LOOP (64 einsum+decode rounds) vs the plane-batched FUSED engine (one
-contraction + one vectorized decode) vs the fused Pallas kernel (oracle
-interpret mode on CPU).  Every function takes ``smoke=True`` for the reduced
-CI matrix.
+paper-calibrated energy/latency model, then times every fabric configuration
+through ONE entry point — :func:`repro.core.fabric.fabric_matmul` with a
+:class:`FabricSpec` — so each CSV row is labeled by the spec that produced it
+(``exact/jnp``, ``exact/pallas``, ``sim/jnp``, ``sim/pallas``,
+``sim/jnp+noise``) and the perf trajectory distinguishes backends.  The seed
+per-plane-pair loop engine stays as the ``sim_loop`` baseline row.  Every
+function takes ``smoke=True`` for the reduced CI matrix.
 """
 from __future__ import annotations
 
@@ -16,13 +17,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_fn
-from repro.core.energy import fabric_matmul_cost
-from repro.core.imc_matmul import imc_matmul
-from repro.core.quant import quantize, to_offset_binary
+from repro.core.fabric import Fabric, FabricSpec, NoiseSpec, fabric_matmul
 
 
 def fabric_projection(smoke: bool = False):
     rows = []
+    spec = FabricSpec()
     cases = [
         ("mlp_768x3072", 512, 768, 3072),  # imc-paper-110m MLP
         ("attn_qkv_2048", 512, 2048, 2048),  # qwen2.5-3b projection
@@ -30,14 +30,15 @@ def fabric_projection(smoke: bool = False):
     ]
     if smoke:
         cases = cases[:1]
+    fab = Fabric(spec)
     for name, m, k, n in cases:
         for macros in (1, 4096, 65536):
-            rep = fabric_matmul_cost(m, k, n, n_macros=macros)
+            rep = fab.cost((m, k), (k, n), n_macros=macros)
             rows.append(row(
                 f"imc_fabric/{name}/macros{macros}", rep.latency_s * 1e6,
                 f"E={rep.energy_j*1e6:.1f}uJ evals={rep.evaluations:.3g} "
                 f"TOPS/W={rep.tops_per_w:.2f}"))
-        cold = fabric_matmul_cost(m, k, n, schedule="cold")
+        cold = fab.cost((m, k), (k, n), schedule="cold")
         rows.append(row(
             f"imc_fabric/{name}/cold", cold.latency_s * 1e6,
             f"paper-63ns-per-op schedule; E={cold.energy_j*1e6:.1f}uJ"))
@@ -54,36 +55,40 @@ def exact_path_throughput(smoke: bool = False):
     for m, k, n in shapes:
         x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
         w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
-        f = jax.jit(lambda x, w: imc_matmul(x, w, bits=8, mode="exact"))
+        spec = FabricSpec(mode="exact", backend="jnp")
+        f = jax.jit(lambda x, w, s=spec: fabric_matmul(x, w, s))
         us, _ = time_fn(f, x, w, iters=iters)
         flops = 2 * m * k * n
-        rows.append(row(f"imc_exact/xla_{m}x{k}x{n}", us,
+        rows.append(row(f"imc/{spec.label}_{m}x{k}x{n}", us,
                         f"{flops/(us*1e-6)/1e9:.1f}GFLOP/s-int8-equiv"))
-        fk = jax.jit(lambda x, w: imc_matmul(x, w, bits=8, mode="exact",
-                                             use_kernel=True))
+        spec_k = FabricSpec(mode="exact", backend="pallas")
+        fk = jax.jit(lambda x, w, s=spec_k: fabric_matmul(x, w, s))
         us_k, _ = time_fn(fk, x, w, iters=min(iters, 3))
-        rows.append(row(f"imc_exact/pallas_interp_{m}x{k}x{n}", us_k,
-                        "interpret=True (CPU oracle-mode; not perf)"))
+        rows.append(row(f"imc/{spec_k.label}_{m}x{k}x{n}", us_k,
+                        "interpret=True on CPU (oracle-mode; not perf)"))
     return rows
 
 
 def sim_path_throughput(smoke: bool = False):
-    """Engine race on the hardware-faithful sim path: loop vs fused.
+    """Engine race on the hardware-faithful sim path, one row per spec label.
 
-    ``sim_loop``  — seed per-plane-pair engine: bits^2 einsum+decode rounds.
-    ``sim_fused`` — plane-batched engine: ONE batched contraction + ONE
-                    vectorized decode + weighted accumulate (the default
-                    ``imc_matmul(mode="sim")`` path).
-    ``sim_pallas``— the fully fused bitplane_mac kernel, interpret mode on
-                    CPU (correctness oracle, not a perf number off-TPU).
+    ``sim_loop``      — seed per-plane-pair engine: bits^2 einsum+decode
+                        rounds (pre-spec baseline, kept for the trajectory).
+    ``sim/jnp``       — plane-batched engine: ONE batched contraction + ONE
+                        vectorized decode + weighted accumulate.
+    ``sim/jnp+noise`` — same engine with PRNG-keyed device mismatch at the
+                        paper-calibrated sigma (keys folded per plane pair).
+    ``sim/pallas``    — the fully fused bitplane_mac kernel, interpret mode
+                        on CPU (correctness oracle, not a perf number
+                        off-TPU).
     """
-    from repro.core.bitserial import (bitserial_matmul_looped,
-                                      bitserial_matmul_unsigned)
-    from repro.kernels.bitplane_mac.ops import bitplane_mac
+    from repro.core.bitserial import bitserial_matmul_looped
+    from repro.core.quant import quantize, to_offset_binary
 
     rows = []
     rng = np.random.default_rng(1)
     bits = 8
+    key = jax.random.key(0)
     shapes = [(64, 256, 128), (128, 512, 256)]
     iters = 5
     if smoke:
@@ -96,22 +101,33 @@ def sim_path_throughput(smoke: bool = False):
         floop = jax.jit(lambda a, b: bitserial_matmul_looped(
             a, b, bits_a=bits, bits_w=bits, mode="sim"))
         us_loop, out_loop = time_fn(floop, ua, uw, iters=iters)
-        rows.append(row(f"imc_sim/loop_{m}x{k}x{n}", us_loop,
+        rows.append(row(f"imc/sim_loop_{m}x{k}x{n}", us_loop,
                         f"{bits * bits} einsum+decode rounds (seed engine)"))
-        ffused = jax.jit(lambda a, b: bitserial_matmul_unsigned(
-            a, b, bits_a=bits, bits_w=bits, mode="sim"))
-        us_fused, out_fused = time_fn(ffused, ua, uw, iters=iters)
-        assert np.array_equal(np.asarray(out_loop), np.asarray(out_fused))
-        rows.append(row(f"imc_sim/fused_{m}x{k}x{n}", us_fused,
+
+        spec = FabricSpec(mode="sim", backend="jnp")
+        ffused = jax.jit(lambda x, w, s=spec: fabric_matmul(x, w, s))
+        us_fused, out_fused = time_fn(ffused, x, w, iters=iters)
+        rows.append(row(f"imc/{spec.label}_{m}x{k}x{n}", us_fused,
                         f"plane-batched engine; {us_loop/us_fused:.2f}x vs "
                         "loop"))
+
+        spec_n = FabricSpec(mode="sim", backend="jnp",
+                            noise=NoiseSpec.calibrated())
+        fnoise = jax.jit(lambda x, w, key, s=spec_n: fabric_matmul(
+            x, w, s, key=key))
+        us_noise, _ = time_fn(fnoise, x, w, key, iters=iters)
+        rows.append(row(f"imc/{spec_n.label}_{m}x{k}x{n}", us_noise,
+                        f"keyed mismatch; {us_noise/us_fused:.2f}x vs "
+                        "noise-free"))
+
         if (m, k, n) == shapes[0]:
-            fker = jax.jit(lambda a, b: bitplane_mac(
-                a, b, bits_a=bits, bits_w=bits))
-            us_ker, out_ker = time_fn(fker, ua, uw, iters=2, warmup=1)
-            assert np.array_equal(np.asarray(out_loop), np.asarray(out_ker))
-            rows.append(row(f"imc_sim/pallas_interp_{m}x{k}x{n}", us_ker,
-                            "interpret=True (CPU oracle-mode; not perf)"))
+            spec_p = FabricSpec(mode="sim", backend="pallas")
+            fker = jax.jit(lambda x, w, s=spec_p: fabric_matmul(x, w, s))
+            us_ker, out_ker = time_fn(fker, x, w, iters=2, warmup=1)
+            np.testing.assert_array_equal(np.asarray(out_fused),
+                                          np.asarray(out_ker))
+            rows.append(row(f"imc/{spec_p.label}_{m}x{k}x{n}", us_ker,
+                            "interpret=True on CPU (oracle-mode; not perf)"))
     return rows
 
 

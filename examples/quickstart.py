@@ -2,8 +2,10 @@
 
 Walks the full Fig-5 pipeline — operand load (8 write cycles), pre-charge,
 multi-row evaluation, comparator decode — then derives every logic function
-of Table II from single MAC evaluations, and finishes with an N-bit MAC
-(bit-serial) matching an integer matmul exactly.
+of Table II from single MAC evaluations, and finishes with the production
+entry point: ONE typed :class:`FabricSpec` per fabric configuration, driven
+through the :class:`Fabric` facade (exact digital-equivalent, fused Pallas
+sim, and PRNG-keyed noisy sim side by side).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,9 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ArraySpec, Timing, empty_state, logic2, mac,
-                        mac_energy_fj, write_row)
-from repro.core.imc_matmul import imc_matmul
+from repro.core import (ArraySpec, Fabric, FabricSpec, NoiseSpec, Timing,
+                        empty_state, logic2, mac, mac_energy_fj, write_row)
 
 spec = ArraySpec()  # 8x8, Table-I calibrated
 
@@ -52,19 +53,37 @@ for op in ("AND", "NAND", "OR", "NOR", "XOR", "XNOR", "SUM", "CARRY"):
 assert np.array_equal(np.asarray(out["AND"]), wa & wb)
 assert np.array_equal(np.asarray(out["XOR"]), wa ^ wb)
 
-# ---- 4. N-bit MAC: bit-serial planes == integer matmul --------------------
-print("\n== 8-bit x 8-bit MAC (bit-serial fabric) vs float matmul ==")
+# ---- 4. N-bit MAC through the Fabric facade: one spec per configuration ---
+print("\n== FabricSpec: exact / fused-sim / noisy-sim, side by side ==")
 x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
 w = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
-y_exact = imc_matmul(x, w, bits=8, mode="exact")
-y_sim = imc_matmul(x, w, bits=8, mode="sim", mismatch=True,
-                   key=jax.random.key(0))
 ref = x @ w
-print(f" rel err exact-path: "
-      f"{float(jnp.linalg.norm(y_exact-ref)/jnp.linalg.norm(ref)):.4f} "
-      f"(int8 quantization)")
-print(f" rel err analog-sim (device mismatch): "
-      f"{float(jnp.linalg.norm(y_sim-ref)/jnp.linalg.norm(ref)):.4f}")
+
+specs = [
+    # digital equivalent: int8 GEMM (auto -> MXU Pallas kernel on TPU)
+    FabricSpec(mode="exact"),
+    # hardware-faithful sim, fully fused Pallas kernel (interpret on CPU)
+    FabricSpec(mode="sim", backend="pallas"),
+    # keyed analog non-idealities: device mismatch at the calibrated sigma
+    FabricSpec(mode="sim", backend="jnp", noise=NoiseSpec.calibrated()),
+    # reconfigurable precision: 4-bit activations x 8-bit weights
+    FabricSpec(bits_a=4, bits_w=8, mode="sim", backend="jnp"),
+]
+key = jax.random.key(0)
+for spec in specs:
+    fab = Fabric(spec)
+    y = fab.matmul(x, w, key=key if spec.noisy else None)
+    rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    print(f" {spec.label:14s} ({spec.bits_a}x{spec.bits_w}b) rel err {rel:.4f}")
+
+# the same spec prices the op on the modeled hardware...
+rep = Fabric(specs[0]).cost(x.shape, w.shape)
+print(f" cost[{specs[0].label}]: {rep.evaluations} evaluations, "
+      f"E={rep.energy_j*1e12:.2f}pJ, {rep.tops_per_w:.2f} TOPS/W-1b")
+# ...and drives the MAC-derived logic of section 3 (exact == analog decode)
+xor = Fabric(FabricSpec(mode="sim")).logic(wa, wb, "XOR")
+assert np.array_equal(np.asarray(xor), wa ^ wb)
+print(f" fabric logic XOR through the analog decode: {np.asarray(xor)}")
 print(f" energy model: count=8 eval costs {float(mac_energy_fj(8)):.1f} fJ "
       f"(paper Table III: 452.2 fJ)")
 print("\nquickstart OK")

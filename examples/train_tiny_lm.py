@@ -38,8 +38,10 @@ def main():
                                   lr=1e-3)
     losses = [m["loss"] for m in hist]
     n = sum(np.asarray(x).size for x in jax.tree.leaves(params))
-    print(f"params: {n/1e6:.1f}M  (imc_mode={cfg.imc_mode}, "
-          f"{cfg.imc_bits}-bit fabric)")
+    fab = cfg.imc_fabric
+    print(f"params: {n/1e6:.1f}M  (fabric={fab.label}, "
+          f"{fab.bits_a}x{fab.bits_w}-bit)" if fab else
+          f"params: {n/1e6:.1f}M  (fabric off)")
     print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"over {args.steps} steps")
     assert losses[-1] < losses[0], "training must reduce loss"

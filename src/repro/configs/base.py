@@ -3,7 +3,9 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
+
+from repro.core.fabric import FabricSpec
 
 # ---------------------------------------------------------------- model config
 @dataclass(frozen=True)
@@ -43,8 +45,13 @@ class ModelConfig:
     # modality frontend (STUB: precomputed embeddings in, per assignment)
     frontend: str = "none"  # none | audio | vision
     frontend_dim: int = 0
-    # IMC integration (the paper's technique as an execution mode)
-    imc_mode: str = "off"  # off | exact | sim
+    # IMC integration (the paper's technique as an execution mode).  Two
+    # channels, read through the `imc_fabric` property: the typed `fabric`
+    # field (authoritative when set), else the deprecated imc_mode/imc_bits
+    # pair.  Neither field is rewritten, so dataclasses.replace on either
+    # channel behaves predictably; setting both to conflicting values raises.
+    fabric: Optional[FabricSpec] = None
+    imc_mode: str = "off"  # off | exact | sim (deprecated spelling)
     imc_bits: int = 8
     # numerics / execution
     q_chunk: int = 512
@@ -62,6 +69,33 @@ class ModelConfig:
             raise ValueError(
                 f"{self.name}: n_layers={self.n_layers} incompatible with "
                 f"pattern period {period} + tail {len(self.tail)}")
+        if (self.fabric is not None and self.imc_mode != "off"
+                and (self.imc_mode != self.fabric.mode
+                     or self.imc_bits != self.fabric.bits_a)):
+            # Both channels set to different things: undecidable intent —
+            # raise instead of silently picking one.  (Writes to one channel
+            # alone always behave: fabric= governs when set, the legacy pair
+            # governs otherwise; see the imc_fabric property.)
+            raise ValueError(
+                f"{self.name}: ambiguous IMC config — fabric={self.fabric} "
+                f"disagrees with legacy imc_mode={self.imc_mode!r}/"
+                f"imc_bits={self.imc_bits}; the typed fabric field is "
+                "authoritative: clear the legacy channel (imc_mode='off') "
+                "or replace fabric= itself (fabric=None turns IMC off)")
+
+    @property
+    def imc_fabric(self) -> Optional[FabricSpec]:
+        """The active fabric: the typed field, else the legacy pair, else off.
+
+        Model code reads THIS (never the raw fields), so both config
+        spellings drive the same spec-typed path.
+        """
+        if self.fabric is not None:
+            return self.fabric
+        if self.imc_mode != "off":
+            return FabricSpec(bits_a=self.imc_bits, bits_w=self.imc_bits,
+                              mode=self.imc_mode)
+        return None
 
     @property
     def n_groups_layers(self) -> int:

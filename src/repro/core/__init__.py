@@ -10,14 +10,17 @@ Layers (bottom-up):
   montecarlo  — device-mismatch MC (Fig 6)
   quant       — int8 symmetric quant + offset-binary bit-planes
   bitserial   — grouped bit-plane MAC with analog decode in the loop
-  imc_matmul  — quantize -> fabric GEMM -> dequant (exact | sim)
+  fabric      — FabricSpec/NoiseSpec + Fabric facade + backend registry:
+                the ONE typed, hashable entry point to the stack
+  imc_matmul  — legacy loose-kwarg shim over fabric_matmul
   imc_linear  — drop-in Linear on the IMC fabric (STE backward)
 """
 from repro.core import constants
 from repro.core.array import ArraySpec, MacResult, empty_state, logic2, mac, read_bit, write, write_row
 from repro.core.decoder import code_to_count, decode_voltage, thermometer_code, thresholds
-from repro.core.energy import Timing, fabric_matmul_cost, logic_energy_fj, mac_energy_fj
-from repro.core.imc_linear import apply_imc_linear, init_imc_linear
+from repro.core.energy import FabricReport, Timing, fabric_matmul_cost, logic_energy_fj, mac_energy_fj
+from repro.core.fabric import Fabric, FabricSpec, NoiseSpec, fabric_matmul
+from repro.core.imc_linear import apply_imc_linear, imc_linear_apply, init_imc_linear
 from repro.core.imc_matmul import imc_matmul, imc_matmul_cost
 from repro.core.logic import add_1bit, logic_from_count
 from repro.core.montecarlo import mc_energy_fj, mc_stats
@@ -29,5 +32,7 @@ __all__ = [
     "code_to_count", "decode_voltage", "logic_from_count", "add_1bit",
     "mac_energy_fj", "logic_energy_fj", "Timing", "fabric_matmul_cost",
     "mc_energy_fj", "mc_stats", "rbl_voltage", "level_voltages",
+    "Fabric", "FabricSpec", "NoiseSpec", "FabricReport", "fabric_matmul",
     "imc_matmul", "imc_matmul_cost", "init_imc_linear", "apply_imc_linear",
+    "imc_linear_apply",
 ]

@@ -136,11 +136,17 @@ def fold_plane_keys(key, n_pairs: int):
 
 def decode_group_counts(counts, *, mode: str = "exact", rows: int = C.ROWS,
                         key=None, mismatch: bool = False,
-                        comparator_offset_sigma=None, rbl_mode: str = "lut"):
+                        mismatch_sigma=None, comparator_offset_sigma=None,
+                        rbl_mode: str = "lut"):
     """Pass group counts through the (modeled) analog decode path.
 
     mode="exact": identity (clipped) — the digital equivalent.
     mode="sim":   counts -> k_eff (+ mismatch) -> V_RBL -> comparators -> counts.
+
+    ``mismatch=True`` draws device mismatch at the paper-calibrated sigma;
+    ``mismatch_sigma`` overrides the sigma explicitly (``NoiseSpec`` path) and
+    implies mismatch.  Passing ``mismatch_sigma=constants.MC_SIGMA_VK`` draws
+    the very same samples as ``mismatch=True``.
     """
     if mode == "exact":
         return jnp.clip(counts, 0, rows)
@@ -148,12 +154,14 @@ def decode_group_counts(counts, *, mode: str = "exact", rows: int = C.ROWS,
         raise ValueError(mode)
     k_eff = counts.astype(jnp.float32)
     ckey = None
+    mismatch = mismatch or mismatch_sigma is not None
     if mismatch or comparator_offset_sigma is not None:
         if key is None:
             raise ValueError("sim with noise requires a PRNG key")
     if mismatch:
         key, nkey = jax.random.split(key)
-        k_eff = k_eff + mc_count_noise(nkey, counts.shape, counts)
+        k_eff = k_eff + mc_count_noise(nkey, counts.shape, counts,
+                                       sigma_vk=mismatch_sigma)
         ckey = key
     elif comparator_offset_sigma is not None:
         ckey = key
@@ -192,6 +200,7 @@ def bitserial_matmul_unsigned(u_a, u_w, *, bits_a: int = 8, bits_w: int = 8,
     base_key = decode_kw.pop("key", None)
     noisy = mode == "sim" and (
         decode_kw.get("mismatch") or
+        decode_kw.get("mismatch_sigma") is not None or
         decode_kw.get("comparator_offset_sigma") is not None)
     if noisy:
         if base_key is None:
@@ -206,6 +215,7 @@ def bitserial_matmul_unsigned(u_a, u_w, *, bits_a: int = 8, bits_w: int = 8,
         return _weighted_plane_sum(dec, plane_pair_weights(bits_a, bits_w))
     # noise-free fused engine
     decode_kw.pop("mismatch", None)
+    decode_kw.pop("mismatch_sigma", None)
     decode_kw.pop("comparator_offset_sigma", None)
     rbl_mode = decode_kw.pop("rbl_mode", "lut")
     if decode_kw:

@@ -1,16 +1,19 @@
 """ImcLinear — a Linear layer executed on the (modeled) IMC fabric.
 
-Drop-in replacement for a dense projection inside the model zoo.  Forward:
-dynamic int8 activation quant + static-scale int8 weights + integer GEMM
-(exact IMC-equivalent path; Pallas kernel on TPU), dequant, optional bias.
+Drop-in replacement for a dense projection inside the model zoo, configured by
+ONE :class:`~repro.core.fabric.FabricSpec`.  Forward: dynamic activation quant
+at ``bits_a`` + static-scale weights at ``bits_w`` + the spec's fabric engine
+(exact int GEMM / plane-batched sim / fused Pallas kernel, with optional
+PRNG-keyed noise), dequant, optional bias.
 
 Backward: straight-through estimator — gradients flow as if the layer were the
 underlying float matmul (standard QAT practice), so the same module is usable
-in training AND serving.  ``mode="sim"`` additionally pushes the forward
-through the analog decode path (group-wise, with optional noise) for
-hardware-in-the-loop robustness studies; ``mode="sim", use_kernel=True``
-runs the whole bit-plane pyramid as one fused Pallas launch
-(:mod:`repro.kernels.bitplane_mac`) instead of 64 einsum+decode rounds.
+in training AND serving.  The spec is the custom_vjp's ONLY nondiff argument
+(it is hashable, so it jit-caches like any static); the noise key rides as a
+regular primal with a ``None`` cotangent.
+
+The pre-spec positional signature ``imc_linear_apply(x, w, b, bits, mode,
+use_kernel)`` keeps working for one release with a DeprecationWarning.
 """
 from __future__ import annotations
 
@@ -19,35 +22,71 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.imc_matmul import imc_matmul
+from repro.core.fabric import (FabricSpec, fabric_matmul, legacy_fabric_spec,
+                               warn_deprecated_kwargs)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def imc_linear_apply(x, w, b, bits: int = 8, mode: str = "exact",
-                     use_kernel: bool = False):
-    y = imc_matmul(x, w, bits=bits, mode=mode, use_kernel=use_kernel)
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _imc_linear(x, w, b, key, spec: FabricSpec):
+    y = fabric_matmul(x, w, spec, key=key)
     if b is not None:
         y = y + b
     return y
 
 
-def _fwd(x, w, b, bits, mode, use_kernel):
-    return imc_linear_apply(x, w, b, bits, mode, use_kernel), (x, w, b is None)
+def _fwd(x, w, b, key, spec):
+    return _imc_linear(x, w, b, key, spec), (x, w, b is None)
 
 
-def _bwd(bits, mode, use_kernel, res, g):
+def _bwd(spec, res, g):
     x, w, no_bias = res
     g = g.astype(jnp.float32)
-    dx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
+    dx = jnp.einsum("...n,kn->...k", g, w.astype(jnp.float32)).astype(x.dtype)
     dw = jnp.einsum("...k,...n->kn",
                     x.reshape(-1, x.shape[-1]).astype(jnp.float32),
                     g.reshape(-1, g.shape[-1])).astype(w.dtype)
     db = None if no_bias else jnp.sum(
         g.reshape(-1, g.shape[-1]), axis=0).astype(g.dtype)
-    return dx, dw, db
+    return dx, dw, db, None  # the PRNG key has no cotangent
 
 
-imc_linear_apply.defvjp(_fwd, _bwd)
+_imc_linear.defvjp(_fwd, _bwd)
+
+
+def _legacy_spec_from(api, bits, mode, use_kernel):
+    legacy = {k: v for k, v in dict(bits=bits, mode=mode,
+                                    use_kernel=use_kernel).items()
+              if v is not None}
+    warn_deprecated_kwargs(api, legacy, stacklevel=4)
+    return legacy_fabric_spec(mode=mode if mode is not None else "exact",
+                              bits=bits if bits is not None else 8,
+                              use_kernel=bool(use_kernel))
+
+
+def imc_linear_apply(x, w, b=None, *legacy_pos, spec: FabricSpec | None = None,
+                     key=None, bits: int | None = None,
+                     mode: str | None = None, use_kernel: bool | None = None):
+    """y = fabric(x @ w) + b with STE backward, configured by ``spec``.
+
+    ``key`` is required iff ``spec.noisy`` and threads down to the bit-serial
+    engine's per-plane-pair PRNG folds.  The old positional tail
+    ``(bits, mode, use_kernel)`` and the matching kwargs are deprecated shims.
+    """
+    if legacy_pos:
+        if len(legacy_pos) > 3:
+            raise TypeError(f"too many positional args: {len(legacy_pos) + 3}")
+        vals = dict(zip(("bits", "mode", "use_kernel"), legacy_pos))
+        bits = vals.get("bits", bits)
+        mode = vals.get("mode", mode)
+        use_kernel = vals.get("use_kernel", use_kernel)
+    if bits is not None or mode is not None or use_kernel is not None:
+        if spec is not None:
+            raise TypeError("pass either spec= or legacy bits/mode/use_kernel,"
+                            " not both")
+        spec = _legacy_spec_from("imc_linear_apply", bits, mode, use_kernel)
+    if spec is None:
+        spec = FabricSpec()
+    return _imc_linear(x, w, b, key, spec)
 
 
 def init_imc_linear(key, d_in: int, d_out: int, *, use_bias: bool = False,
@@ -61,7 +100,13 @@ def init_imc_linear(key, d_in: int, d_out: int, *, use_bias: bool = False,
     return p
 
 
-def apply_imc_linear(params, x, *, bits: int = 8, mode: str = "exact",
-                     use_kernel: bool = False):
-    b = params.get("b")
-    return imc_linear_apply(x, params["w"], b, bits, mode, use_kernel)
+def apply_imc_linear(params, x, *, spec: FabricSpec | None = None, key=None,
+                     bits: int | None = None, mode: str | None = None,
+                     use_kernel: bool | None = None):
+    if bits is not None or mode is not None or use_kernel is not None:
+        if spec is not None:
+            raise TypeError("pass either spec= or legacy bits/mode/use_kernel,"
+                            " not both")
+        spec = _legacy_spec_from("apply_imc_linear", bits, mode, use_kernel)
+    return imc_linear_apply(x, params["w"], params.get("b"), spec=spec,
+                            key=key)

@@ -1,90 +1,77 @@
-"""High-level IMC matmul: quantize -> bit-serial MAC on the fabric -> dequant.
+"""Legacy-compatible IMC matmul entry point — now a thin shim over the Fabric.
 
-This is the paper's technique packaged as a drop-in GEMM:
+The real implementation lives in :mod:`repro.core.fabric`: a frozen, hashable
+:class:`~repro.core.fabric.FabricSpec` names the precision/geometry/fidelity/
+backend/noise of the fabric, and :func:`~repro.core.fabric.fabric_matmul`
+dispatches it through the backend registry (exact int GEMM, plane-batched sim
+engine, or the fused Pallas kernels), with the spec as the ONE static jit
+argument.
 
-  * mode="exact"  — digital equivalent of the IMC fabric (decode is exact for
-                    every group, so group sums telescope): an int8 x int8
-                    integer matmul with per-channel dequant.  This is the fast
-                    path; on TPU it runs as a Pallas MXU kernel
-                    (:mod:`repro.kernels.imc_mac`).
-  * mode="sim"    — hardware-faithful emulation: offset-binary bit-planes,
-                    per-8-row-group charge-sharing voltage, comparator
-                    thermometer decode, optional device mismatch + comparator
-                    offset noise.  Runs on the plane-batched engine
-                    (:mod:`repro.core.bitserial`); with ``use_kernel=True``
-                    the noise-free pyramid is ONE fused Pallas launch
-                    (:mod:`repro.kernels.bitplane_mac` — all plane pairs x
-                    K-groups x RBL voltage x comparator decode x weighted
-                    accumulate).  Noisy sims (PRNG-keyed mismatch/comparator
-                    offset) stay on the plane-batched jnp path, which folds
-                    the key per plane pair inside the batch.
+This module keeps the original loose-kwarg surface alive for one release:
 
-Both return float outputs plus an optional hardware cost report
-(:class:`repro.core.energy.FabricReport`).
+    imc_matmul(x, w, bits=8, mode="sim", use_kernel=True)   # DeprecationWarning
+
+maps onto the equivalent spec (including the old silent noisy-kernel -> jnp
+fallback) and produces bit-identical results.  New code should write
+
+    from repro.core.fabric import Fabric, FabricSpec
+    y = Fabric(FabricSpec(mode="sim", backend="pallas")).matmul(x, w)
+
+or pass a spec directly: ``imc_matmul(x, w, spec)``.
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
 from repro.core import constants as C
-from repro.core.bitserial import bitserial_matmul_unsigned
 from repro.core.energy import FabricReport, fabric_matmul_cost
-from repro.core.quant import Quantized, quantize, signed_product_correction, to_offset_binary
+from repro.core.fabric import (Fabric, FabricSpec, fabric_matmul, int_matmul,
+                               legacy_fabric_spec, warn_deprecated_kwargs)
+from repro.core.quant import Quantized, quantize
 
 
-def int_matmul(qa, qw):
-    """int8 x int8 -> int32 matmul (MXU-native on TPU)."""
-    return jax.lax.dot_general(
-        qa.astype(jnp.int8), qw.astype(jnp.int8),
-        (((qa.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
-
-
-@partial(jax.jit, static_argnames=("bits", "mode", "rows", "mismatch",
-                                   "use_kernel"))
-def imc_matmul(x, w, *, bits: int = 8, mode: str = "exact",
-               rows: int = C.ROWS, key=None, mismatch: bool = False,
-               comparator_offset_sigma=None, use_kernel: bool = False):
+def imc_matmul(x, w, spec: FabricSpec | None = None, *, key=None,
+               bits: int | None = None, mode: str | None = None,
+               rows: int | None = None, mismatch: bool | None = None,
+               comparator_offset_sigma=None, use_kernel: bool | None = None):
     """IMC GEMM: y[..., N] ~= x[..., K] @ w[K, N] through the 8T SRAM fabric.
 
-    Activations are quantized per-tensor (dynamic), weights per-output-channel.
+    Prefer ``imc_matmul(x, w, spec, key=...)``.  The pre-spec kwargs
+    (``bits``/``mode``/``rows``/``mismatch``/``comparator_offset_sigma``/
+    ``use_kernel``) still work with a DeprecationWarning and identical
+    semantics.
     """
-    qx = quantize(x, bits, axis=None)
-    qw = quantize(w, bits, axis=0)  # per-column (output channel) scales
-    if mode == "exact":
-        if use_kernel:
-            from repro.kernels.imc_mac.ops import imc_mac
-
-            acc = imc_mac(qx.q, qw.q)
-        else:
-            acc = int_matmul(qx.q, qw.q)
-    elif mode == "sim":
-        u_a = to_offset_binary(qx.q, bits)
-        u_w = to_offset_binary(qw.q, bits)
-        noisy = mismatch or comparator_offset_sigma is not None
-        if use_kernel and not noisy:
-            from repro.kernels.bitplane_mac.ops import bitplane_mac
-
-            uu = bitplane_mac(u_a, u_w, bits_a=bits, bits_w=bits, rows=rows)
-        else:
-            uu = bitserial_matmul_unsigned(
-                u_a, u_w, bits_a=bits, bits_w=bits, rows=rows, mode="sim",
-                key=key, mismatch=mismatch,
-                comparator_offset_sigma=comparator_offset_sigma)
-        acc = uu - signed_product_correction(u_a, u_w, bits)
-    else:
-        raise ValueError(mode)
-    return acc.astype(jnp.float32) * qx.scale * qw.scale.reshape(
-        (1,) * (acc.ndim - 1) + (-1,))
+    legacy = {k: v for k, v in dict(
+        bits=bits, mode=mode, rows=rows, mismatch=mismatch,
+        comparator_offset_sigma=comparator_offset_sigma,
+        use_kernel=use_kernel).items() if v is not None}
+    if legacy:
+        if spec is not None:
+            raise TypeError(
+                f"pass either spec= or the legacy kwargs {sorted(legacy)}, "
+                "not both")
+        warn_deprecated_kwargs("imc_matmul", legacy)
+        spec = legacy_fabric_spec(
+            mode=mode if mode is not None else "exact",
+            bits=bits if bits is not None else 8,
+            rows=rows if rows is not None else C.ROWS,
+            use_kernel=bool(use_kernel), mismatch=bool(mismatch),
+            comparator_offset_sigma=comparator_offset_sigma)
+    elif spec is None:
+        spec = FabricSpec()
+    return fabric_matmul(x, w, spec, key=key)
 
 
-def imc_matmul_cost(x_shape, w_shape, *, bits: int = 8, rows: int = C.ROWS,
-                    cols: int = C.COLS, n_macros: int = 1,
+def imc_matmul_cost(x_shape, w_shape, *, spec: FabricSpec | None = None,
+                    bits: int = 8, rows: int = C.ROWS, cols: int = C.COLS,
+                    n_macros: int = 1,
                     schedule: str = "weight_stationary") -> FabricReport:
-    """Hardware cost projection for an imc_matmul call (energy/latency model)."""
+    """Hardware cost projection for an imc_matmul call (energy/latency model).
+
+    With ``spec`` given, delegates to :meth:`Fabric.cost`; the loose
+    ``bits``/``rows``/``cols`` kwargs remain for compatibility.
+    """
+    if spec is not None:
+        return Fabric(spec).cost(x_shape, w_shape, n_macros=n_macros,
+                                 schedule=schedule)
     *batch, k = x_shape
     m = 1
     for b in batch:

@@ -56,15 +56,22 @@ def from_bitplanes(planes):
     return jnp.sum(planes.astype(jnp.int32) * w, axis=0)
 
 
-def signed_product_correction(u_a, u_w, bits: int = 8):
+def signed_product_correction(u_a, u_w, bits_a: int = 8,
+                              bits_w: int | None = None):
     """Rank-1 correction terms so that q_a.q_w is recovered from u_a.u_w.
 
-    ``u_a``: int32[..., K] offset-binary activations, ``u_w``: int32[K, N].
-    Returns (corr, ) to be SUBTRACTED from the unsigned matmul: a (..., N)
-    array equal to  o*sum_k u_w[k,n] + o*sum_k u_a[...,k] - K*o^2.
+    ``u_a``: int32[..., K] offset-binary activations at ``bits_a``,
+    ``u_w``: int32[K, N] likewise at ``bits_w`` (defaults to ``bits_a``; the
+    precisions may differ — reconfigurable-precision fabrics).  With
+    o_a = 2^{bits_a-1}, o_w = 2^{bits_w-1}:
+
+        q_a . q_w = u_a . u_w - o_a*sum(u_w) - o_w*sum(u_a) + K*o_a*o_w
+
+    Returns the (..., N) array to be SUBTRACTED from the unsigned matmul.
     """
-    o = 1 << (bits - 1)
+    o_a = 1 << (bits_a - 1)
+    o_w = 1 << ((bits_w if bits_w is not None else bits_a) - 1)
     k_dim = u_w.shape[0]
     col = jnp.sum(u_w, axis=0)  # [N]
     row = jnp.sum(u_a, axis=-1, keepdims=True)  # [..., 1]
-    return o * col + o * row - k_dim * o * o
+    return o_a * col + o_w * row - k_dim * o_a * o_w

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_config
+from repro.core.fabric import add_fabric_cli, apply_fabric_cli
 from repro.launch.mesh import dp_axes, make_test_mesh, tp_axis
 from repro.models.common import AxisCtx, axis_ctx
 from repro.models.model import decode_step, init_params, prefill
@@ -130,11 +131,13 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=12)
+    add_fabric_cli(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduce:
         cfg = reduce_config(cfg)
+    cfg = apply_fabric_cli(ap, args, cfg, jitted_what="server")
     mesh = make_test_mesh()
     rng = np.random.default_rng(0)
     params = init_params(jax.random.key(0), cfg)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_config
+from repro.core.fabric import add_fabric_cli, apply_fabric_cli
 from repro.data.pipeline import DataConfig, SyntheticStream
 from repro.launch.mesh import dp_axes, make_test_mesh, tp_axis
 from repro.launch.steps import make_train_step
@@ -81,11 +82,13 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--reduce", action="store_true",
                     help="use the smoke-scale config variant")
+    add_fabric_cli(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduce:
         cfg = reduce_config(cfg)
+    cfg = apply_fabric_cli(ap, args, cfg, jitted_what="trainer")
     (params, _), hist = train(cfg, steps=args.steps,
                               global_batch=args.batch, seq_len=args.seq,
                               ckpt_root=args.ckpt, lr=args.lr)

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.fabric import (FabricSpec, legacy_fabric_spec,
+                               warn_deprecated_kwargs)
 from repro.core.imc_linear import imc_linear_apply
 
 # ------------------------------------------------------------- sharding hints
@@ -138,16 +140,77 @@ def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
     return p
 
 
-def dense(params, x, *, imc_mode: str = "off", imc_bits: int = 8,
-          use_kernel: bool = False):
-    """Dense projection; routes through the IMC fabric when imc_mode != off.
+# Ambient PRNG source for noisy fabric specs in model code paths that don't
+# thread keys explicitly (eager robustness studies; see fabric_noise_key).
+_FABRIC_KEY = threading.local()
+
+
+class fabric_noise_key:
+    """Context manager: provide the PRNG key noisy FabricSpecs draw from.
+
+    ``with fabric_noise_key(key): forward_logits(...)`` — each ``dense`` call
+    under a noisy spec folds a fresh stream off the key (trace-order counter),
+    so a model forward is fully keyed without threading keys through every
+    layer signature.  Intended for EAGER noise/robustness studies: under
+    ``jax.jit`` the folded keys are baked in as constants at trace time, so
+    re-entering with a different key will NOT refresh a cached executable —
+    pass ``key=`` explicitly to :func:`dense` for jitted noisy paths.
+    """
+
+    def __init__(self, key):
+        self.key = key
+
+    def __enter__(self):
+        self.prev = getattr(_FABRIC_KEY, "state", None)
+        _FABRIC_KEY.state = {"key": self.key, "n": 0}
+        return self
+
+    def __exit__(self, *exc):
+        _FABRIC_KEY.state = self.prev
+
+
+def _take_fabric_key(spec):
+    st = getattr(_FABRIC_KEY, "state", None)
+    if st is None:
+        raise ValueError(
+            f"FabricSpec {spec.label} is noisy but no PRNG key is available: "
+            "pass key= to dense(), or wrap the forward in "
+            "models.common.fabric_noise_key(key)")
+    k = jax.random.fold_in(st["key"], st["n"])
+    st["n"] += 1
+    return k
+
+
+def dense(params, x, *, spec: Optional[FabricSpec] = None, key=None,
+          imc_mode: Optional[str] = None, imc_bits: Optional[int] = None,
+          use_kernel: Optional[bool] = None):
+    """Dense projection; routes through the IMC fabric when ``spec`` is given.
 
     This is the paper-technique integration point: every projection in the
-    model zoo funnels through here.
+    model zoo funnels through here, carrying ONE typed
+    :class:`~repro.core.fabric.FabricSpec` instead of loose kwargs.  ``key``
+    feeds the spec's noise model (required iff ``spec.noisy``; falls back to
+    the ambient :class:`fabric_noise_key` context).  The pre-spec
+    ``imc_mode``/``imc_bits``/``use_kernel`` kwargs are deprecated shims.
     """
-    if imc_mode != "off":
+    if imc_mode is not None or imc_bits is not None or use_kernel is not None:
+        if spec is not None:
+            raise TypeError(
+                "pass either spec= or legacy imc_mode/imc_bits/use_kernel, "
+                "not both")
+        warn_deprecated_kwargs(
+            "dense", (k for k, v in dict(imc_mode=imc_mode, imc_bits=imc_bits,
+                                         use_kernel=use_kernel).items()
+                      if v is not None), stacklevel=3)
+        if imc_mode is not None and imc_mode != "off":
+            spec = legacy_fabric_spec(
+                mode=imc_mode, bits=imc_bits if imc_bits is not None else 8,
+                use_kernel=bool(use_kernel))
+    if spec is not None:
+        if spec.noisy and key is None:
+            key = _take_fabric_key(spec)
         y = imc_linear_apply(x, params["w"].astype(jnp.float32),
-                             params.get("b"), imc_bits, imc_mode, use_kernel)
+                             params.get("b"), spec=spec, key=key)
         return y.astype(x.dtype)
     y = x @ params["w"].astype(x.dtype)
     if "b" in params:

@@ -87,9 +87,11 @@ def init_stack(key, cfg: ModelConfig):
 
 # ------------------------------------------------------------------ blocks
 def _imc_kw(cfg: ModelConfig):
-    if cfg.imc_mode == "off":
+    """Fabric routing for every projection in the stack: ONE typed spec."""
+    spec = cfg.imc_fabric
+    if spec is None:
         return {}
-    return {"imc_mode": cfg.imc_mode, "imc_bits": cfg.imc_bits}
+    return {"spec": spec}
 
 
 def _mix(cfg, params, x, kind, mode, cache, pos, prefill_extra=0):

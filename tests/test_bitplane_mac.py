@@ -161,27 +161,34 @@ def test_bitplane_kernel_custom_thresholds_detune():
     assert not np.array_equal(np.asarray(out_bad), np.asarray(out_good))
 
 
-# ------------------------------------------------------- imc_matmul wiring
-def test_imc_matmul_sim_fused_kernel_matches_jnp_sim():
+# ------------------------------------------------------- fabric wiring
+def test_fabric_matmul_sim_fused_kernel_matches_jnp_sim():
+    from repro.core.fabric import FabricSpec
+
     rng = np.random.default_rng(80)
     x = jnp.asarray(rng.normal(size=(4, 24)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(24, 8)).astype(np.float32))
-    ys = imc_matmul(x, w, bits=4, mode="sim")
-    yk = imc_matmul(x, w, bits=4, mode="sim", use_kernel=True)
+    ys = imc_matmul(x, w, FabricSpec(bits_a=4, bits_w=4, mode="sim",
+                                     backend="jnp"))
+    yk = imc_matmul(x, w, FabricSpec(bits_a=4, bits_w=4, mode="sim",
+                                     backend="pallas"))
     np.testing.assert_array_equal(np.asarray(ys), np.asarray(yk))
-    ye = imc_matmul(x, w, bits=4, mode="exact")
+    ye = imc_matmul(x, w, FabricSpec(bits_a=4, bits_w=4, mode="exact"))
     np.testing.assert_allclose(np.asarray(ye), np.asarray(yk), rtol=1e-6)
 
 
-def test_imc_matmul_sim_kernel_with_noise_falls_back_keyed():
-    # Noisy sims stay on the plane-batched jnp path (keyed), kernel or not.
+def test_legacy_noisy_use_kernel_falls_back_keyed():
+    # The OLD kwargs silently fell back to the keyed jnp path when
+    # use_kernel=True met noise; the deprecation shim preserves that mapping
+    # (the new spec API raises on noisy+pallas instead — see test_fabric).
     rng = np.random.default_rng(81)
     x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
     key = jax.random.key(5)
-    y1 = imc_matmul(x, w, bits=8, mode="sim", key=key, mismatch=True,
-                    use_kernel=True)
-    y2 = imc_matmul(x, w, bits=8, mode="sim", key=key, mismatch=True)
+    with pytest.warns(DeprecationWarning):
+        y1 = imc_matmul(x, w, bits=8, mode="sim", key=key, mismatch=True,
+                        use_kernel=True)
+        y2 = imc_matmul(x, w, bits=8, mode="sim", key=key, mismatch=True)
     np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
 
 

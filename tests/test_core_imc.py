@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core.bitserial import bitserial_matmul_unsigned, decode_group_counts, group_counts
+from repro.core.fabric import Fabric, FabricSpec, NoiseSpec
 from repro.core.imc_linear import apply_imc_linear, init_imc_linear
 from repro.core.imc_matmul import imc_matmul, imc_matmul_cost, int_matmul
 from repro.core.quant import (dequantize, from_bitplanes, quantize,
@@ -88,7 +89,7 @@ def test_imc_matmul_exact_close_to_float():
     rng = np.random.default_rng(7)
     x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
-    y = imc_matmul(x, w, bits=8, mode="exact")
+    y = imc_matmul(x, w, FabricSpec())
     ref = x @ w
     rel = np.linalg.norm(np.asarray(y - ref)) / np.linalg.norm(np.asarray(ref))
     assert rel < 0.02  # int8 quantization error budget
@@ -98,8 +99,8 @@ def test_imc_matmul_sim_noiseless_equals_exact():
     rng = np.random.default_rng(8)
     x = jnp.asarray(rng.normal(size=(4, 24)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(24, 8)).astype(np.float32))
-    ye = imc_matmul(x, w, bits=4, mode="exact")
-    ys = imc_matmul(x, w, bits=4, mode="sim")
+    ye = imc_matmul(x, w, FabricSpec(bits_a=4, bits_w=4))
+    ys = imc_matmul(x, w, FabricSpec(bits_a=4, bits_w=4, mode="sim", backend="jnp"))
     np.testing.assert_allclose(np.asarray(ye), np.asarray(ys), rtol=1e-6)
 
 
@@ -107,7 +108,8 @@ def test_imc_matmul_sim_with_mismatch_bounded_error():
     rng = np.random.default_rng(9)
     x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
-    y = imc_matmul(x, w, bits=8, mode="sim", mismatch=True,
+    y = imc_matmul(x, w, FabricSpec(mode="sim", backend="jnp",
+                                    noise=NoiseSpec.calibrated()),
                    key=jax.random.key(0))
     ref = np.asarray(x @ w)
     rel = np.linalg.norm(np.asarray(y) - ref) / np.linalg.norm(ref)
@@ -143,8 +145,8 @@ def test_imc_matmul_use_kernel_matches_xla_path():
     rng = np.random.default_rng(11)
     x = jnp.asarray(rng.normal(size=(24, 80)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(80, 40)).astype(np.float32))
-    y_xla = imc_matmul(x, w, bits=8, mode="exact", use_kernel=False)
-    y_ker = imc_matmul(x, w, bits=8, mode="exact", use_kernel=True)
+    y_xla = imc_matmul(x, w, FabricSpec(backend="jnp"))
+    y_ker = imc_matmul(x, w, FabricSpec(backend="pallas"))
     np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_ker), rtol=1e-6)
 
 
