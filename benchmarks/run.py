@@ -5,11 +5,18 @@ artifact upload).  ``--smoke`` runs the reduced matrix — small shapes, fewer
 iterations — so a CPU CI runner finishes in a couple of minutes while still
 seeding the perf trajectory.  Roofline rows appear when dry-run records exist
 under experiments/dryrun/.
+
+``--json [PATH]`` additionally runs the Engine-backed continuous-batching
+serve bench per FabricSpec (float / exact / sim / noisy-sim) and writes
+per-spec rows — tokens/s and steady-state decode-step ms — to ``PATH``
+(default ``BENCH_imc.json``), the machine-readable start of the serving perf
+trajectory.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 
 
 def _rows_from(fn, smoke: bool):
@@ -18,12 +25,64 @@ def _rows_from(fn, smoke: bool):
     return fn()
 
 
+def serve_spec_rows(smoke: bool = True):
+    """Continuous-batching serve throughput per FabricSpec (reduced arch)."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduce_config
+    from repro.core.fabric import FabricSpec, NoiseSpec
+    from repro.launch.engine import Engine
+    from repro.launch.serve import BatchedServer, Request
+    from repro.models.model import init_params
+    from repro.runtime.straggler import StragglerMonitor
+
+    cfg0 = reduce_config(get_config("qwen2.5-3b"))
+    specs = [
+        ("float", None),
+        (None, FabricSpec(mode="exact", backend="jnp")),
+        (None, FabricSpec(bits_a=4, bits_w=4, mode="sim", backend="jnp")),
+        (None, FabricSpec(bits_a=4, bits_w=4, mode="sim", backend="jnp",
+                          noise=NoiseSpec(mismatch_sigma=0.05))),
+    ]
+    n_req, max_new = (4, 6) if smoke else (8, 16)
+    params = init_params(jax.random.key(0), cfg0)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg0.vocab_size, size=16).astype(np.int32)
+               for _ in range(n_req)]
+    rows = []
+    for label, spec in specs:
+        cfg = dataclasses.replace(cfg0, fabric=spec, imc_mode="off")
+        engine = Engine(monitor=StragglerMonitor())
+        with engine.activate():
+            server = BatchedServer(cfg, params, slots=4, prompt_len=16,
+                                   max_new=max_new, engine=engine)
+            reqs = [Request(i, p, max_new) for i, p in enumerate(prompts)]
+            _, tps = server.run(reqs)
+        host = engine.monitor.hosts.get(0)
+        rows.append({
+            "spec": label or spec.label,
+            "arch": cfg0.name,
+            "tokens_per_s": round(tps, 2),
+            "step_ms": round(host.ewma_time * 1e3, 3) if host else None,
+            "compiled_steps": engine.stats.compiles,
+            "traces": engine.stats.traces,
+        })
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced bench matrix (CI smoke; seeds perf CSV)")
     ap.add_argument("--out", default=None,
                     help="also write the CSV to this path")
+    ap.add_argument("--json", nargs="?", const="BENCH_imc.json", default=None,
+                    metavar="PATH",
+                    help="run the per-spec serve bench and write JSON rows "
+                         "(tokens/s, step ms) to PATH")
     args = ap.parse_args(argv)
 
     from benchmarks import bench_imc_throughput, bench_paper_tables, roofline
@@ -40,6 +99,15 @@ def main(argv=None) -> None:
     if args.out:
         with open(args.out, "w") as f:
             f.write("\n".join(lines) + "\n")
+    if args.json:
+        rows = serve_spec_rows(smoke=args.smoke)
+        rec = {"benchmark": "continuous_batching_serve", "smoke": args.smoke,
+               "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=1)
+        for r in rows:
+            print(f"serve/{r['spec']},{r['step_ms']},"
+                  f"{r['tokens_per_s']} tok/s", flush=True)
 
 
 if __name__ == "__main__":

@@ -84,6 +84,15 @@ print(f" cost[{specs[0].label}]: {rep.evaluations} evaluations, "
 xor = Fabric(FabricSpec(mode="sim")).logic(wa, wb, "XOR")
 assert np.array_equal(np.asarray(xor), wa ^ wb)
 print(f" fabric logic XOR through the analog decode: {np.asarray(xor)}")
+# word level: packed uint8 operands, 8 columns per MAC activation (§III)
+pa, pb = np.uint8(0xC5), np.uint8(0x3A)
+fab_sim = Fabric(FabricSpec(mode="sim"))
+nand = fab_sim.logic_word(pa, pb, "NAND")
+tot, carry = fab_sim.add_nbit(pa, pb)
+assert int(nand) == (~(pa & pb)) & 0xFF
+assert int(tot) == (int(pa) + int(pb)) & 0xFF
+print(f" word logic: 0x{pa:02X} NAND 0x{pb:02X} = 0x{int(nand):02X}; "
+      f"ripple-carry add -> 0x{int(tot):02X} carry {int(carry)}")
 print(f" energy model: count=8 eval costs {float(mac_energy_fj(8)):.1f} fJ "
       f"(paper Table III: 452.2 fJ)")
 print("\nquickstart OK")

@@ -1,6 +1,8 @@
 """Batched serving example: continuous-batching decode over a request queue
 (prefill -> slot merge -> lockstep decode -> retire), on a reduced qwen2.5
-config so it runs on CPU in seconds.
+config so it runs on CPU in seconds.  The Engine owns mesh, step compilation
+(one executable per kind — no recompiles at steady state), and the noise
+keys, so add ``--imc-mode sim --imc-noise-sigma 0.05`` for a noisy fabric.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py [--arch gemma3-12b]
 """
@@ -10,10 +12,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduce_config
-from repro.launch.mesh import dp_axes, make_test_mesh, tp_axis
+from repro.core.fabric import add_fabric_cli, apply_fabric_cli
+from repro.launch.engine import Engine
 from repro.launch.serve import BatchedServer, Request
-from repro.models.common import AxisCtx, axis_ctx
 from repro.models.model import init_params
+from repro.runtime.straggler import StragglerMonitor
 
 
 def main():
@@ -22,25 +25,29 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    add_fabric_cli(ap)
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch))
+    cfg = apply_fabric_cli(ap, args, cfg, jitted_what="server")
     rng = np.random.default_rng(0)
     params = init_params(jax.random.key(0), cfg)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=24).astype(np.int32),
                     args.max_new) for i in range(args.requests)]
 
-    mesh = make_test_mesh()
-    with jax.set_mesh(mesh), axis_ctx(AxisCtx(dp_axes(mesh), tp_axis(mesh))):
+    engine = Engine(noise_seed=args.seed, monitor=StragglerMonitor())
+    with engine.activate():
         server = BatchedServer(cfg, params, slots=args.slots, prompt_len=24,
-                               max_new=args.max_new)
+                               max_new=args.max_new, engine=engine)
         done, tps = server.run(reqs)
 
     assert all(len(r.out) == args.max_new for r in done)
     for r in done:
         print(f"req{r.rid}: generated {r.out}")
     print(f"{args.requests} requests through {args.slots} slots; "
-          f"{tps:.1f} tok/s lockstep decode")
+          f"{tps:.1f} tok/s lockstep decode; {engine.stats.compiles} compiled "
+          f"steps, {engine.stats.traces} traces (steady state recompile-free)")
     print("serve_batched OK")
 
 

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 from repro.core import constants as C
 from repro.core.bitserial import bitserial_matmul_unsigned, decode_group_counts
 from repro.core.energy import FabricReport, fabric_matmul_cost
-from repro.core.logic import OPS, logic_from_count
+from repro.core.logic import (OPS, add_nbit, logic_from_count, logic_word)
 from repro.core.quant import quantize, signed_product_correction, to_offset_binary
 
 MODES = ("exact", "sim")
@@ -321,6 +321,30 @@ class Fabric:
         return imc_linear_apply(x, params["w"], params.get("b"),
                                 spec=self.spec, key=key)
 
+    def _count_decode(self, key):
+        """counts -> counts through the spec's decode path, fresh-keyed.
+
+        Each call of the returned closure folds a new stream off ``key``, so
+        multi-evaluation word ops (ripple-carry stages) draw independent
+        noise per MAC activation — mirroring distinct array cycles.
+        """
+        if self.spec.noisy and key is None:
+            raise ValueError(f"spec {self.spec.label} is noisy: pass key=")
+        state = {"n": 0}
+
+        def decode(count):
+            kw = {}
+            if self.spec.noisy:
+                kw = dict(key=jax.random.fold_in(key, state["n"]),
+                          mismatch_sigma=self.spec.noise.mismatch_sigma,
+                          comparator_offset_sigma=(
+                              self.spec.noise.comparator_offset_sigma))
+                state["n"] += 1
+            return decode_group_counts(count, mode=self.spec.mode,
+                                       rows=self.spec.rows, **kw)
+
+        return decode
+
     def logic(self, a, b, op: str, *, key=None):
         """MAC-derived bitwise logic (paper §III-B..E, Table II).
 
@@ -333,17 +357,25 @@ class Fabric:
         if op not in OPS:
             raise ValueError(f"op must be one of {OPS}, got {op!r}")
         count = jnp.asarray(a, jnp.int32) + jnp.asarray(b, jnp.int32)
-        kw = {}
-        if self.spec.noisy:
-            if key is None:
-                raise ValueError(f"spec {self.spec.label} is noisy: pass key=")
-            kw = dict(key=key,
-                      mismatch_sigma=self.spec.noise.mismatch_sigma,
-                      comparator_offset_sigma=(
-                          self.spec.noise.comparator_offset_sigma))
-        dec = decode_group_counts(count, mode=self.spec.mode,
-                                  rows=self.spec.rows, **kw)
+        dec = self._count_decode(key)(count)
         return logic_from_count(dec, m=2)[op]
+
+    def logic_word(self, a, b, op: str, *, bits: int = 8, key=None):
+        """Bitwise ``op`` over packed ``bits``-wide words (paper §III).
+
+        8 columns evaluate in parallel per macro activation, so a uint8 word
+        is one MAC cycle; every column's count runs through the spec's
+        decode path (``key`` required iff noisy).
+        """
+        return logic_word(a, b, op, bits=bits, decode=self._count_decode(key))
+
+    def add_nbit(self, a, b, *, bits: int = 8, key=None):
+        """Ripple-carry word addition from 1-bit MAC adders (paper §III-E).
+
+        Returns ``(sum mod 2**bits, carry_out)``; each half-adder stage is a
+        separate keyed MAC evaluation under a noisy spec.
+        """
+        return add_nbit(a, b, bits=bits, decode=self._count_decode(key))
 
     def cost(self, x_shape, w_shape, *, n_macros: int = 1,
              schedule: str = "weight_stationary") -> FabricReport:
@@ -361,15 +393,17 @@ class Fabric:
 # --------------------------------------------------------------------- CLI
 def add_fabric_cli(ap) -> None:
     """Attach the FabricSpec flags to an argparse parser (launchers' edge)."""
-    ap.add_argument("--imc", default=None, choices=("off",) + MODES,
+    ap.add_argument("--imc", "--imc-mode", dest="imc", default=None,
+                    choices=("off",) + MODES,
                     help="route every projection through the IMC fabric")
     ap.add_argument("--imc-bits", type=int, default=8,
                     help="activation precision (bits_a)")
     ap.add_argument("--imc-bits-w", type=int, default=0,
                     help="weight precision (0 -> same as --imc-bits)")
     ap.add_argument("--imc-backend", default="auto", choices=BACKENDS)
-    ap.add_argument("--imc-mismatch-sigma", type=float, default=None,
-                    help="device mismatch sigma (sim only; keyed)")
+    ap.add_argument("--imc-mismatch-sigma", "--imc-noise-sigma",
+                    dest="imc_mismatch_sigma", type=float, default=None,
+                    help="device mismatch sigma (sim only; keyed per step)")
     ap.add_argument("--imc-comparator-sigma", type=float, default=None,
                     help="comparator offset sigma in V (sim only; keyed)")
 
@@ -391,18 +425,13 @@ def apply_fabric_cli(ap, args, cfg, *, jitted_what: str = "launcher"):
     """Shared launcher edge: fold the --imc* flags into a ModelConfig.
 
     Returns ``cfg`` unchanged when ``--imc`` wasn't given.  Noisy specs are
-    rejected HERE (``ap.error``) because the jitted train/serve steps have no
-    PRNG-key plumbing for the noise model yet — fail at the flag, not deep
-    inside a trace.
+    first-class here: the launch Engine threads a per-step PRNG key through
+    every jitted step, so ``--imc-noise-sigma`` runs at training/serving
+    scale (seed-reproducible via the Engine's ``noise_seed``).
     """
     if args.imc is None:
         return cfg
     spec = fabric_from_cli(args)
-    if spec is not None and spec.noisy:
-        ap.error("noisy fabrics (--imc-mismatch-sigma/--imc-comparator-sigma)"
-                 f" are not supported by the jitted {jitted_what}; use "
-                 "Fabric.matmul(key=) or models.common.fabric_noise_key in "
-                 "eager code")
     # spec built at the edge; imc_mode="off" clears the legacy channel so
     # the typed field (or None, for --imc off) is the one source of truth
     return dataclasses.replace(cfg, fabric=spec, imc_mode="off")

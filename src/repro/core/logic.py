@@ -6,13 +6,24 @@ Paper §III-B..E: with m rows activated, a single MAC evaluation yields
     XOR  = parity(count)         XNOR = !XOR     (m=2: count==1, as Table II)
     SUM  = XOR, CARRY = AND      (1-bit addition, m=2)
 simultaneously, with no additional logic circuitry.  8 columns evaluated in
-parallel give bitwise 8-bit operations.
+parallel give bitwise 8-bit operations: :func:`logic_word` runs one packed
+word per macro row-pair activation (each bit position is a column), and
+:func:`add_nbit` chains :func:`add_1bit` into a ripple-carry adder — two MAC
+evaluations per bit (half-adder pair), the carry read off the count.
+
+Word-level functions take an optional ``decode`` callable (counts -> counts)
+so the :class:`~repro.core.fabric.Fabric` facade can route every column's
+2-operand count through the spec's analog decode path (voltage + comparator
+model, optionally noisy) instead of the ideal identity.
 """
 from __future__ import annotations
+
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
 OPS = ("AND", "NAND", "OR", "NOR", "XOR", "XNOR", "SUM", "CARRY")
+WORD_OPS = ("AND", "NAND", "OR", "NOR", "XOR", "XNOR")
 
 
 def logic_from_count(count, m: int = 2):
@@ -44,3 +55,71 @@ def truth_table_counts():
     a = jnp.array([0, 0, 1, 1], jnp.int32)
     b = jnp.array([0, 1, 0, 1], jnp.int32)
     return a + b  # for 1-bit operands, count = A + B
+
+
+# ------------------------------------------------------------- word level
+def unpack_word(x, bits: int = 8):
+    """Packed uints -> bit planes: (...,) -> (..., bits) uint8, LSB first."""
+    x = jnp.asarray(x, jnp.int32)
+    shifts = jnp.arange(bits, dtype=jnp.int32)
+    return ((x[..., None] >> shifts) & 1).astype(jnp.uint8)
+
+
+def pack_word(planes, dtype=None):
+    """Bit planes -> packed uints: (..., bits) uint8 -> (...,) ``dtype``.
+
+    ``dtype=None`` picks the narrowest unsigned type that holds ``bits``.
+    """
+    bits = planes.shape[-1]
+    if dtype is None:
+        dtype = (jnp.uint8 if bits <= 8
+                 else jnp.uint16 if bits <= 16 else jnp.uint32)
+    weights = jnp.left_shift(1, jnp.arange(bits, dtype=jnp.int32))
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=-1).astype(dtype)
+
+
+def _word_counts(a, b, bits: int):
+    """Per-column 2-operand MAC counts for packed words (one row pair)."""
+    return (unpack_word(a, bits).astype(jnp.int32)
+            + unpack_word(b, bits).astype(jnp.int32))
+
+
+def logic_word(a, b, op: str, *, bits: int = 8,
+               decode: Optional[Callable] = None):
+    """Bitwise ``op`` over packed ``bits``-wide words (paper §III, Table II).
+
+    Each bit position is one macro column; the whole word evaluates in a
+    single 2-row MAC activation, so e.g. uint8 AND/XOR/NOR come out of one
+    cycle.  ``decode`` passes every column's count through the (modeled)
+    analog path; the default is the ideal digital count.
+    """
+    op = op.upper()
+    if op not in WORD_OPS:
+        raise ValueError(f"op must be one of {WORD_OPS}, got {op!r}")
+    count = _word_counts(a, b, bits)
+    if decode is not None:
+        count = decode(count)
+    return pack_word(logic_from_count(count, m=2)[op])
+
+
+def add_nbit(a, b, *, bits: int = 8, decode: Optional[Callable] = None):
+    """Ripple-carry addition of packed ``bits``-wide words via MAC adds.
+
+    Two :func:`add_1bit` evaluations per bit (half-adder pair: operand bits,
+    then sum+carry-in); the stage carries combine with an OR read off the
+    same counts.  Returns ``(sum mod 2**bits, carry_out)`` as uint8 arrays —
+    exactly the paper's §III-E multi-bit extension of the 1-bit adder.
+    """
+    dec = decode if decode is not None else (lambda c: c)
+    pa = unpack_word(a, bits).astype(jnp.int32)
+    pb = unpack_word(b, bits).astype(jnp.int32)
+    carry = jnp.zeros(jnp.broadcast_shapes(pa.shape[:-1], pb.shape[:-1]),
+                      jnp.uint8)
+    outs = []
+    for i in range(bits):
+        s1, c1 = add_1bit(dec(pa[..., i] + pb[..., i]))
+        s2, c2 = add_1bit(dec(s1.astype(jnp.int32)
+                              + carry.astype(jnp.int32)))
+        outs.append(s2)
+        carry = jnp.bitwise_or(c1, c2)
+    return pack_word(jnp.stack(outs, axis=-1)), carry

@@ -5,8 +5,8 @@ os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 MUST be the entry point of a fresh process (the XLA flag above is read at
-first jax init).  For each cell:
-    with mesh: jax.jit(step, in_shardings=...).lower(*input_specs).compile()
+first jax init).  For each cell, ``Engine.aot_compile`` lowers + compiles the
+step under the production mesh with explicit in_shardings,
 and records memory_analysis / cost_analysis / collective traffic to JSON under
 experiments/dryrun/.  Success here proves the distribution config is coherent:
 sharding mismatches, non-divisible layouts, and partitioner failures all
@@ -18,17 +18,12 @@ Usage:
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
-import time  # noqa: E402
 import traceback  # noqa: E402
 
-import jax  # noqa: E402
-
 from repro.configs import ASSIGNED_ARCHS, LONG_CONTEXT_ARCHS, SHAPES, get_config  # noqa: E402
+from repro.launch.engine import Engine  # noqa: E402
 from repro.launch.hlo_analysis import collective_bytes, roofline_terms  # noqa: E402
-from repro.launch.mesh import dp_axes, make_production_mesh, tp_axis  # noqa: E402
-from repro.launch.sharding import partition_inputs  # noqa: E402
-from repro.launch.steps import input_specs, step_fn_for  # noqa: E402
-from repro.models.common import AxisCtx, axis_ctx  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
@@ -49,21 +44,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    n_dev = mesh.size
-    t0 = time.time()
-    specs = input_specs(cfg, shape)
-    shardings = partition_inputs(specs, cfg, shape, mesh)
-    step = step_fn_for(cfg, shape)
-
-    with jax.set_mesh(mesh), axis_ctx(AxisCtx(dp_axes(mesh), tp_axis(mesh))):
-        jitted = jax.jit(step, in_shardings=shardings,
-                         donate_argnums=(0, 1) if shape.kind != "prefill"
-                         else ())
-        lowered = jitted.lower(*specs)
-        t_lower = time.time() - t0
-        compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+    engine = Engine(mesh=make_production_mesh(multi_pod=multi_pod))
+    n_dev = engine.mesh.size
+    aot = engine.aot_compile(cfg, shape)
+    compiled = aot.compiled
+    t_lower, t_compile = aot.lower_s, aot.compile_s
 
     ma = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}

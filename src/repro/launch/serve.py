@@ -4,9 +4,19 @@ Models the production serving shape: prefill each arriving request, merge its
 KV cache into the running batch at a free slot, decode all active slots in
 lockstep with ONE sharded serve_step per token, retire finished requests.
 Slot merge/retire is pure pytree surgery, so the decode step stays a single
-compiled executable (no recompiles at steady state).
+compiled executable (no recompiles at steady state — asserted by tests via
+``Engine.stats``).
+
+The :class:`~repro.launch.engine.Engine` owns mesh, step compilation, and the
+per-invocation PRNG keys, so noisy fabrics (``--imc-noise-sigma``) serve
+seed-reproducibly.  Runtime hooks ride the loop: every decode step's wall
+time feeds the Engine's straggler monitor, and ``fail_at=`` injects crashes
+(chaos drills) that the server survives by re-queuing in-flight requests —
+greedy decode makes the recovered token streams bit-identical.
 
     python -m repro.launch.serve --arch qwen2.5-3b --reduce --requests 6
+    python -m repro.launch.serve --arch qwen2.5-3b --reduce --requests 6 \
+        --imc-mode sim --imc-noise-sigma 0.05 --seed 7
 """
 from __future__ import annotations
 
@@ -21,9 +31,10 @@ import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.core.fabric import add_fabric_cli, apply_fabric_cli
-from repro.launch.mesh import dp_axes, make_test_mesh, tp_axis
-from repro.models.common import AxisCtx, axis_ctx
-from repro.models.model import decode_step, init_params, prefill
+from repro.launch.engine import Engine
+from repro.models.model import init_params
+from repro.runtime.fault_tolerance import InjectedFailure
+from repro.runtime.straggler import StragglerMonitor
 
 
 @dataclass
@@ -45,13 +56,14 @@ def _batch_axis(one) -> int:
 def _set_slot(b, o, slot):
     """Write one request's cache leaf (B=1) into the batch cache at ``slot``.
 
-    All requests in this driver share a prompt length, so the scalar ``pos``
-    is identical across slots and passes through unchanged.
+    The scalar ``pos`` of a fresh (B=1) cache lands in the batch cache's
+    per-slot pos vector, so slots admitted at different ticks decode at
+    their own sequence positions.
     """
     if b.ndim == 0:
         return b
     idx = [slice(None)] * b.ndim
-    idx[_batch_axis(o)] = slice(slot, slot + 1)
+    idx[_batch_axis(o) if o.ndim else 0] = slice(slot, slot + 1)
     return b.at[tuple(idx)].set(o)
 
 
@@ -59,21 +71,28 @@ class BatchedServer:
     """Fixed-slot continuous batching (slots = max concurrent requests)."""
 
     def __init__(self, cfg, params, slots: int = 4, prompt_len: int = 32,
-                 max_new: int = 16):
+                 max_new: int = 16, engine: Optional[Engine] = None):
         self.cfg, self.params = cfg, params
+        self.engine = engine or Engine()
         self.slots = slots
         self.prompt_len = prompt_len
         self.max_new = max_new
         self.active: List[Optional[Request]] = [None] * slots
         self.cache = None
-        self._decode = jax.jit(
-            lambda p, c, t: decode_step(p, c, t, cfg))
-        self._prefill = jax.jit(
-            lambda p, b: prefill(p, b, cfg, max_new_tokens=max_new))
+        self.recoveries = 0
+        self._tick = 0  # one noise key per jitted invocation (prefill/decode)
+        self._decode = self.engine.decode_step(cfg)
+        self._prefill = self.engine.prefill_step(cfg, max_new_tokens=max_new)
+
+    def _next_key(self, slot: int = 0):
+        k = self.engine.noise_key(self._tick, slot)
+        self._tick += 1
+        return k
 
     def _admit(self, req: Request, slot: int):
         batch = {"tokens": jnp.asarray(req.prompt[None])}
-        logits, cache1 = self._prefill(self.params, batch)
+        logits, cache1 = self._prefill(self.params, batch,
+                                       self._next_key(slot))
         req.out.append(int(jnp.argmax(logits[0])))
         if self.cache is None:
             # materialize the batch cache by broadcasting the first request
@@ -89,34 +108,69 @@ class BatchedServer:
         for i, r in enumerate(self.active):
             if r and not r.done:
                 toks[i, 0] = r.out[-1]
+        t0 = time.perf_counter()
         logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks))
+                                          jnp.asarray(toks), self._next_key())
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.engine.observe_step_time(time.perf_counter() - t0)
         for i, r in enumerate(self.active):
             if r and not r.done:
                 r.out.append(int(nxt[i]))
                 if len(r.out) >= r.max_new:
                     r.done = True
                     self.active[i] = None  # retire slot
+        return nxt
 
-    def run(self, requests: List[Request]):
+    def _recover(self) -> List[Request]:
+        """Drop the in-flight batch state and re-queue unfinished requests.
+
+        Greedy decode is deterministic, so replaying a request from its
+        prompt reproduces the exact token stream the crash interrupted.
+        """
+        requeued = []
+        for i, r in enumerate(self.active):
+            if r is not None:
+                r.out.clear()
+                r.done = False
+                requeued.append(r)
+            self.active[i] = None
+        self.cache = None
+        self.recoveries += 1
+        return requeued
+
+    def run(self, requests: List[Request], *, fail_at=None):
+        """Serve ``requests`` to completion; returns (requests, tokens/sec).
+
+        ``fail_at``: decode-step indices at which to inject a crash once
+        (chaos drill exercising the recovery path).
+        """
         pending = list(requests)
+        fail_at = set(fail_at or ())
+        nstep = 0
         t0 = time.time()
-        ntok = 0
         while pending or any(self.active):
             for i in range(self.slots):
                 if self.active[i] is None and pending:
                     self._admit(pending.pop(0), i)
             if any(self.active):
-                self.step()
-                ntok += sum(1 for r in self.active if r)
+                try:
+                    if nstep in fail_at:
+                        fail_at.discard(nstep)
+                        raise InjectedFailure(
+                            f"injected failure at decode step {nstep}")
+                    self.step()
+                except InjectedFailure:
+                    pending = self._recover() + pending
+                nstep += 1
         dt = time.time() - t0
+        # delivered tokens only: work discarded by a recovery doesn't count
+        ntok = sum(len(r.out) for r in requests)
         return requests, ntok / max(dt, 1e-9)
 
 
 def _broadcast_slots(one, slots):
-    if one.ndim == 0:
-        return one
+    if one.ndim == 0:  # scalar pos -> per-slot position vector
+        return jnp.zeros((slots,), one.dtype)
     axis = _batch_axis(one)
     reps = [1] * one.ndim
     reps[axis] = slots
@@ -131,6 +185,8 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="noise-key seed (noisy serve is reproducible in it)")
     add_fabric_cli(ap)
     args = ap.parse_args()
 
@@ -138,20 +194,22 @@ def main():
     if args.reduce:
         cfg = reduce_config(cfg)
     cfg = apply_fabric_cli(ap, args, cfg, jitted_what="server")
-    mesh = make_test_mesh()
     rng = np.random.default_rng(0)
     params = init_params(jax.random.key(0), cfg)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                     size=args.prompt_len).astype(np.int32),
                     args.max_new) for i in range(args.requests)]
-    with jax.set_mesh(mesh), axis_ctx(AxisCtx(dp_axes(mesh), tp_axis(mesh))):
+    engine = Engine(noise_seed=args.seed, monitor=StragglerMonitor())
+    with engine.activate():
         server = BatchedServer(cfg, params, slots=args.slots,
                                prompt_len=args.prompt_len,
-                               max_new=args.max_new)
+                               max_new=args.max_new, engine=engine)
         done, tps = server.run(reqs)
     for r in done:
         print(f"req{r.rid}: {len(r.out)} tokens -> {r.out[:8]}...")
-    print(f"throughput: {tps:.1f} tok/s (batched lockstep decode)")
+    print(f"throughput: {tps:.1f} tok/s (batched lockstep decode; "
+          f"{engine.stats.compiles} compiled steps, "
+          f"{engine.stats.traces} traces)")
 
 
 if __name__ == "__main__":

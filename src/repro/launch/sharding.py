@@ -170,16 +170,17 @@ def partition_cache(cache_tree, cfg: ModelConfig, shape: ShapeConfig, mesh):
 # ------------------------------------------------------------- full bundles
 def partition_inputs(specs: Any, cfg: ModelConfig, shape: ShapeConfig, mesh):
     """Shardings matching launch.steps.input_specs(cfg, shape)."""
+    key = NamedSharding(mesh, P())  # per-step PRNG key: replicated scalar
     if shape.kind == "train":
-        params, opt, batch = specs
+        params, opt, batch, _ = specs
         return (partition_params(params, cfg, mesh),
                 partition_opt(opt, cfg, mesh),
-                partition_batch(batch, cfg, shape, mesh))
+                partition_batch(batch, cfg, shape, mesh), key)
     if shape.kind == "prefill":
-        params, batch = specs
+        params, batch, _ = specs
         return (partition_params(params, cfg, mesh),
-                partition_batch(batch, cfg, shape, mesh))
-    params, cache, token = specs
+                partition_batch(batch, cfg, shape, mesh), key)
+    params, cache, token, _ = specs
     return (partition_params(params, cfg, mesh),
             partition_cache(cache, cfg, shape, mesh),
-            partition_batch(token, cfg, shape, mesh))
+            partition_batch(token, cfg, shape, mesh), key)

@@ -3,24 +3,38 @@
 These are the exact computations the dry-run lowers and the trainers run.
 ``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
 device allocation) for every model input of a given (arch x shape) cell.
+
+Every step takes a trailing per-step PRNG ``key`` (a regular traced argument,
+replicated by the sharding rules).  Inside the step the key becomes the
+ambient :class:`~repro.models.common.fabric_noise_key`, so noisy FabricSpecs
+draw fresh, key-derived noise on every invocation of the SAME compiled
+executable — noise-free specs simply never read it and XLA drops the dead
+argument.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import fabric_noise_key
 from repro.models.model import decode_step, init_params, loss_fn, prefill
 from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
 
 
+def _noise_ctx(key):
+    return fabric_noise_key(key) if key is not None else contextlib.nullcontext()
+
+
 # ------------------------------------------------------------------ steps
 def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig()):
-    def train_step(params, opt_state, batch):
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch, cfg)
+    def train_step(params, opt_state, batch, key=None):
+        with _noise_ctx(key):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, cfg)
         new_params, new_opt, om = adamw_update(grads, opt_state, opt_cfg)
         metrics = dict(metrics, **om)
         return new_params, new_opt, metrics
@@ -28,16 +42,18 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig()):
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig):
-    def prefill_step(params, batch):
-        return prefill(params, batch, cfg)
+def make_prefill_step(cfg: ModelConfig, max_new_tokens: int = 0):
+    def prefill_step(params, batch, key=None):
+        with _noise_ctx(key):
+            return prefill(params, batch, cfg, max_new_tokens=max_new_tokens)
 
     return prefill_step
 
 
 def make_serve_step(cfg: ModelConfig):
-    def serve_step(params, cache, token):
-        return decode_step(params, cache, token, cfg)
+    def serve_step(params, cache, token, key=None):
+        with _noise_ctx(key):
+            return decode_step(params, cache, token, cfg)
 
     return serve_step
 
@@ -91,19 +107,25 @@ def token_specs(shape: ShapeConfig):
     return _sds((shape.global_batch, 1), jnp.int32)
 
 
+def key_specs():
+    """Abstract per-step PRNG key (typed key array, scalar)."""
+    return jax.eval_shape(lambda: jax.random.key(0))
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig):
     """All abstract inputs for the cell's step function, keyed by kind:
-    train  -> (params, opt_state, batch)
-    prefill-> (params, batch)
-    decode -> (params, cache, token)
+    train  -> (params, opt_state, batch, key)
+    prefill-> (params, batch, key)
+    decode -> (params, cache, token, key)
     """
     if shape.kind == "train":
-        return (params_specs(cfg), opt_specs(cfg), batch_specs(cfg, shape))
+        return (params_specs(cfg), opt_specs(cfg), batch_specs(cfg, shape),
+                key_specs())
     if shape.kind == "prefill":
-        return (params_specs(cfg), batch_specs(cfg, shape))
+        return (params_specs(cfg), batch_specs(cfg, shape), key_specs())
     if shape.kind == "decode":
         return (params_specs(cfg), cache_specs(cfg, shape),
-                token_specs(shape))
+                token_specs(shape), key_specs())
     raise ValueError(shape.kind)
 
 

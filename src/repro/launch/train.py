@@ -1,7 +1,9 @@
 """End-to-end trainer: data -> sharded train_step -> checkpoints, fault-tolerant.
 
 Single-process entry point that scales down to 1 CPU device (examples/tests)
-and up to the production mesh (same code path the dry-run lowers).
+and up to the production mesh (same code path the dry-run lowers).  All mesh,
+sharding, compilation, and noise-key concerns live in
+:class:`repro.launch.engine.Engine`; this file is just the loop.
 
     python -m repro.launch.train --arch imc-paper-110m --steps 200 \
         --ckpt /tmp/ckpt --batch 8 --seq 256
@@ -16,25 +18,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_config
+from repro.configs.base import ShapeConfig
 from repro.core.fabric import add_fabric_cli, apply_fabric_cli
 from repro.data.pipeline import DataConfig, SyntheticStream
-from repro.launch.mesh import dp_axes, make_test_mesh, tp_axis
-from repro.launch.steps import make_train_step
-from repro.models.common import AxisCtx, axis_ctx
-from repro.models.model import init_params
+from repro.launch.engine import Engine
 from repro.optim.adamw import AdamWConfig, init_adamw
+from repro.models.model import init_params
 from repro.runtime.fault_tolerance import FaultTolerantLoop
 from repro.runtime.straggler import StragglerMonitor
 
 
 def train(cfg, *, steps: int, global_batch: int, seq_len: int,
           ckpt_root: str | None = None, ckpt_every: int = 50,
-          lr: float = 3e-4, seed: int = 0, mesh=None, log_every: int = 10,
-          fail_at=None):
+          lr: float = 3e-4, seed: int = 0, engine: Engine | None = None,
+          log_every: int = 10, fail_at=None):
     opt_cfg = AdamWConfig(lr=lr, warmup_steps=min(20, steps // 10 + 1),
                           total_steps=steps)
-    step_fn_raw = make_train_step(cfg, opt_cfg)
-    mesh = mesh or make_test_mesh()
+    engine = engine or Engine(noise_seed=seed, monitor=StragglerMonitor())
+    shape = ShapeConfig("runtime", seq_len, global_batch, "train")
     stream = SyntheticStream(DataConfig(
         cfg.vocab_size, seq_len, global_batch, seed=seed,
         frontend_dim=cfg.frontend_dim if cfg.frontend != "none" else 0))
@@ -43,13 +44,16 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
     opt_state = init_adamw(params)
     metrics_hist = []
 
-    with jax.set_mesh(mesh), axis_ctx(AxisCtx(dp_axes(mesh), tp_axis(mesh))):
-        jitted = jax.jit(step_fn_raw, donate_argnums=(0, 1))
+    with engine.activate():
+        params = engine.shard_params(cfg, params)
+        jitted = engine.train_step(cfg, opt_cfg)
 
-        def step_fn(state, batch):
+        def step_fn(state, batch, step):
             params, opt_state = state
-            batch = jax.tree.map(jnp.asarray, batch)
-            params, opt_state, metrics = jitted(params, opt_state, batch)
+            batch = engine.shard_batch(cfg, shape,
+                                       jax.tree.map(jnp.asarray, batch))
+            params, opt_state, metrics = jitted(params, opt_state, batch,
+                                                engine.noise_key(step))
             metrics_hist.append({k: float(v) for k, v in metrics.items()})
             return (params, opt_state)
 
@@ -57,13 +61,14 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
             loop = FaultTolerantLoop(
                 ckpt_root, step_fn, lambda s: stream.batch(s),
                 ckpt_every=ckpt_every, fail_at=fail_at,
-                monitor=StragglerMonitor())
+                monitor=engine.monitor or StragglerMonitor())
             state = loop.run((params, opt_state), steps)
         else:
             state = (params, opt_state)
             for s in range(steps):
                 t0 = time.time()
-                state = step_fn(state, stream.batch(s))
+                state = step_fn(state, stream.batch(s), s)
+                engine.observe_step_time(time.time() - t0)
                 if s % log_every == 0:
                     m = metrics_hist[-1]
                     print(f"step {s:5d} loss={m['loss']:.4f} "
@@ -79,6 +84,7 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--reduce", action="store_true",
                     help="use the smoke-scale config variant")
@@ -91,7 +97,7 @@ def main():
     cfg = apply_fabric_cli(ap, args, cfg, jitted_what="trainer")
     (params, _), hist = train(cfg, steps=args.steps,
                               global_batch=args.batch, seq_len=args.seq,
-                              ckpt_root=args.ckpt, lr=args.lr)
+                              ckpt_root=args.ckpt, lr=args.lr, seed=args.seed)
     losses = [m["loss"] for m in hist]
     print(f"\nfinal loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
           f"params = {sum(np.asarray(x).size for x in jax.tree.leaves(params)):,}")

@@ -216,37 +216,39 @@ def attn_prefill(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
 
 def attn_decode(params, x, cache: AttnCache, pos, *, n_heads, n_kv_heads,
                 head_dim, rope_theta, window: int = 0, **imc):
-    """One-token decode. x: (B, 1, D); pos: scalar int32 (current position).
+    """One-token decode. x: (B, 1, D); pos: scalar int32 OR (B,) int32 —
+    per-row positions support continuous batching, where slots admitted at
+    different ticks sit at different sequence positions.
 
-    Writes the new K/V into slot ``pos % T_alloc`` (ring semantics for local
-    layers; for global layers T_alloc == context so the slot is just ``pos``).
+    Writes each row's new K/V into slot ``pos % T_alloc`` (ring semantics for
+    local layers; for global layers T_alloc == context so the slot is just
+    ``pos``).
     """
     b = x.shape[0]
     t_alloc = cache.k.shape[1]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = (pos if pos.ndim else jnp.full((b,), pos))[:, None]  # (B,1)
     q, k_new, v_new = _project_qkv(params, x, n_heads, n_kv_heads, head_dim,
                                    positions, rope_theta, **imc)
-    slot = jnp.mod(pos, t_alloc)
+    rows = jnp.arange(b)
+    slot = jnp.mod(positions[:, 0], t_alloc)  # (B,) per-row ring index
     int8_cache = cache.k_scale is not None
     if int8_cache:
         kq_new, ks_new = _kv_quant(k_new)
         vq_new, vs_new = _kv_quant(v_new)
-        kq = jax.lax.dynamic_update_slice_in_dim(cache.k, kq_new, slot, axis=1)
-        vq = jax.lax.dynamic_update_slice_in_dim(cache.v, vq_new, slot, axis=1)
-        ks = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks_new, slot, axis=1)
-        vs = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs_new, slot, axis=1)
+        kq = cache.k.at[rows, slot].set(kq_new[:, 0])
+        vq = cache.v.at[rows, slot].set(vq_new[:, 0])
+        ks = cache.k_scale.at[rows, slot].set(ks_new[:, 0])
+        vs = cache.v_scale.at[rows, slot].set(vs_new[:, 0])
         k = _kv_dequant(kq, ks, q.dtype)
         v = _kv_dequant(vq, vs, q.dtype)
     else:
-        k = jax.lax.dynamic_update_slice_in_dim(
-            cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(
-            cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
-    key_pos = jax.lax.dynamic_update_slice_in_dim(
-        cache.key_pos, positions.astype(jnp.int32), slot, axis=1)
-    valid = (key_pos >= 0) & (key_pos <= pos)
+        k = cache.k.at[rows, slot].set(k_new[:, 0].astype(cache.k.dtype))
+        v = cache.v.at[rows, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    key_pos = cache.key_pos.at[rows, slot].set(positions[:, 0])
+    valid = (key_pos >= 0) & (key_pos <= positions)  # (B,T)
     if window:
-        valid &= key_pos > pos - window
+        valid &= key_pos > positions - window
     mask = valid[:, None, None, None, :]  # (B,1,1,1,T)
     out = _sdpa(q, k, v, mask)
     y = dense(params["wo"], out.reshape(b, 1, -1), **imc)

@@ -68,8 +68,10 @@ def shard_hint(x, kind: str):
     ctx = get_axis_ctx()
     if ctx is None:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    from repro.launch.compat import ambient_mesh
+
+    mesh = ambient_mesh()
+    if mesh is None:
         return x
     dp, tp = ctx.dp, ctx.tp
     spec = {
@@ -151,10 +153,15 @@ class fabric_noise_key:
     ``with fabric_noise_key(key): forward_logits(...)`` — each ``dense`` call
     under a noisy spec folds a fresh stream off the key (trace-order counter),
     so a model forward is fully keyed without threading keys through every
-    layer signature.  Intended for EAGER noise/robustness studies: under
-    ``jax.jit`` the folded keys are baked in as constants at trace time, so
-    re-entering with a different key will NOT refresh a cached executable —
-    pass ``key=`` explicitly to :func:`dense` for jitted noisy paths.
+    layer signature.
+
+    Works eagerly AND inside jit: the launch-layer step functions
+    (:mod:`repro.launch.steps`) take the per-step key as a regular traced
+    argument and enter this context *inside* the jitted function, so the
+    folded keys are traced values — re-running the cached executable with a
+    new key refreshes the noise.  (Entering the context *outside* a ``jit``
+    with a concrete key still bakes the folds in as constants at trace time;
+    thread the key through the jitted signature for cached noisy paths.)
     """
 
     def __init__(self, key):
@@ -169,15 +176,29 @@ class fabric_noise_key:
         _FABRIC_KEY.state = self.prev
 
 
-def _take_fabric_key(spec):
+def fold_fabric_key():
+    """Fresh fold off the ambient noise key, or None outside the context.
+
+    The stack walker (:func:`repro.models.transformer.stack_forward`) uses
+    this to draw one base key per forward and re-seed the context per scanned
+    layer group, so groups executed by the same traced scan body still draw
+    independent noise.
+    """
     st = getattr(_FABRIC_KEY, "state", None)
     if st is None:
+        return None
+    k = jax.random.fold_in(st["key"], st["n"])
+    st["n"] += 1
+    return k
+
+
+def _take_fabric_key(spec):
+    k = fold_fabric_key()
+    if k is None:
         raise ValueError(
             f"FabricSpec {spec.label} is noisy but no PRNG key is available: "
             "pass key= to dense(), or wrap the forward in "
             "models.common.fabric_noise_key(key)")
-    k = jax.random.fold_in(st["key"], st["n"])
-    st["n"] += 1
     return k
 
 

@@ -16,6 +16,7 @@ Block kinds:
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -23,7 +24,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.attention import attn_decode, attn_forward, attn_prefill
-from repro.models.common import init_rmsnorm, rmsnorm, shard_hint
+from repro.models.common import (fabric_noise_key, fold_fabric_key,
+                                 init_rmsnorm, rmsnorm, shard_hint)
 from repro.models.mlp import apply_mlp, init_mlp
 from repro.models.moe import apply_moe, init_moe
 from repro.models.rglru import init_rglru, rglru_decode, rglru_forward
@@ -182,16 +184,29 @@ def stack_forward(params, x, cfg: ModelConfig, mode: str,
     assert mode in ("train", "prefill", "decode")
     build_cache = mode in ("prefill", "decode")
 
+    # Noisy fabric: one ambient fold per forward, split per layer group and
+    # carried through the scan xs — groups share ONE traced body, so without
+    # this every group would replay the same trace-time noise stream.
+    spec = cfg.imc_fabric
+    gkeys = None
+    if spec is not None and spec.noisy:
+        base = fold_fabric_key()
+        if base is not None:
+            gkeys = jax.random.split(base, cfg.n_groups_layers)
+
     def group_body(carry, xs):
         x, aux_acc = carry
         gparams = xs[0]
         gcaches = xs[1] if mode == "decode" else (None,) * len(cfg.pattern)
+        ctx = (fabric_noise_key(xs[-1]) if gkeys is not None
+               else contextlib.nullcontext())
         new_caches = []
-        for p_idx, kind in enumerate(cfg.pattern):
-            x, nc, aux = apply_block(gparams[p_idx], x, kind, cfg, mode,
-                                     cache=gcaches[p_idx], pos=pos,
-                                     prefill_extra=prefill_extra)
-            new_caches.append(nc)
+        with ctx:
+            for p_idx, kind in enumerate(cfg.pattern):
+                x, nc, aux = apply_block(gparams[p_idx], x, kind, cfg, mode,
+                                         cache=gcaches[p_idx], pos=pos,
+                                         prefill_extra=prefill_extra)
+                new_caches.append(nc)
         ys = tuple(new_caches) if build_cache else None
         return (x, _acc_aux(aux_acc, aux)), ys
 
@@ -200,6 +215,8 @@ def stack_forward(params, x, cfg: ModelConfig, mode: str,
     xs = (params["groups"],)
     if mode == "decode":
         xs = (params["groups"], cache.groups)
+    if gkeys is not None:
+        xs = xs + (gkeys,)
     (x, aux_acc), group_caches = jax.lax.scan(body, (x, _zero_aux()), xs)
 
     tail_caches = []

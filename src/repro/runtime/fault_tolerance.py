@@ -27,7 +27,7 @@ class InjectedFailure(RuntimeError):
 @dataclass
 class FaultTolerantLoop:
     ckpt_root: str
-    step_fn: Callable[[Any, Any], Any]  # (state, batch) -> state
+    step_fn: Callable[[Any, Any, int], Any]  # (state, batch, step) -> state
     batch_fn: Callable[[int], Any]  # step -> batch (random-access pipeline)
     ckpt_every: int = 50
     keep_last: int = 3
@@ -58,7 +58,9 @@ class FaultTolerantLoop:
                 raise InjectedFailure(f"injected failure at step {step}")
             t0 = time.perf_counter()
             batch = self.batch_fn(step)
-            state = self.step_fn(state, batch)
+            # the global step rides along so per-step noise keys (and hence
+            # resumed runs) are independent of where the loop restarted
+            state = self.step_fn(state, batch, step)
             dt = time.perf_counter() - t0
             self.monitor.record_step({0: dt})
             if (step + 1) % self.ckpt_every == 0 or step == n_steps - 1:

@@ -120,7 +120,7 @@ def test_fault_tolerant_restart_bit_exact(tmp_path):
     root = str(tmp_path / "ft")
     stream = SyntheticStream(DataConfig(97, 8, 4))
 
-    def step_fn(state, batch):
+    def step_fn(state, batch, step):
         return {"w": state["w"] + jnp.sum(batch["tokens"]) % 13,
                 "n": state["n"] + 1}
 
