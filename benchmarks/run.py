@@ -7,10 +7,13 @@ seeding the perf trajectory.  Roofline rows appear when dry-run records exist
 under experiments/dryrun/.
 
 ``--json [PATH]`` additionally runs the Engine-backed continuous-batching
-serve bench per FabricSpec (float / exact / sim / noisy-sim) and writes
-per-spec rows — tokens/s and steady-state decode-step ms — to ``PATH``
-(default ``BENCH_imc.json``), the machine-readable start of the serving perf
-trajectory.
+serve bench per (FabricSpec x KV geometry) — float / exact / sim / noisy-sim,
+each under the legacy fixed ring AND the paged block pool, plus one
+ragged-admission paged row — and writes rows (tokens/s, steady-state
+decode-step ms) to ``PATH`` (default ``BENCH_imc.json``).
+
+``--compare OLD NEW`` diffs two such JSON files (tokens/s, step ms, % delta)
+as a markdown table — CI posts this against the previous main artifact.
 """
 from __future__ import annotations
 
@@ -25,19 +28,68 @@ def _rows_from(fn, smoke: bool):
     return fn()
 
 
+def _serve_once(cfg, params, lengths, max_new, kv):
+    """One Server run: warmup wave (compiles) + timed wave; returns a row."""
+    import time
+
+    import numpy as np
+
+    from repro.launch.engine import Engine
+    from repro.launch.server import Request, Server
+    from repro.runtime.straggler import StragglerMonitor
+
+    buckets = sorted({-(-n // 16) * 16 for n in lengths})
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in lengths]
+    engine = Engine(monitor=StragglerMonitor())
+    with engine.activate():
+        server = Server(cfg, params, engine=engine, slots=4, kv=kv,
+                        block_size=8, buckets=buckets,
+                        max_seq_len=max(buckets) + max_new)
+        for p in prompts:  # warmup wave: traces + compiles land here
+            server.submit(Request(p, max_new_tokens=max_new))
+        server.drain()
+        warm = engine.stats.traces
+        timed = []
+        d0, t0 = server.decode_s, time.perf_counter()
+        for _ in range(4):  # several timed waves: averages out host jitter
+            wave = [server.submit(Request(p, max_new_tokens=max_new))
+                    for p in prompts]
+            server.drain()
+            timed += wave
+        dt = time.perf_counter() - t0
+        decode_dt = server.decode_s - d0
+    assert engine.stats.traces == warm, "steady-state recompile in bench"
+    # tokens/s is LOCKSTEP-DECODE throughput (BatchedServer.run semantics):
+    # each handle's first token comes from prefill logits, the rest from
+    # decode ticks timed device-side via Server.decode_s.
+    tokens = sum(len(h.tokens) - 1 for h in timed)
+    host = engine.monitor.hosts.get(0)
+    return {
+        "tokens_per_s": round(tokens / decode_dt, 2),
+        "e2e_tokens_per_s": round(sum(len(h.tokens) for h in timed) / dt, 2),
+        "step_ms": round(host.ewma_time * 1e3, 3) if host else None,
+        "compiled_steps": engine.stats.compiles,
+        "traces": engine.stats.traces,
+    }
+
+
 def serve_spec_rows(smoke: bool = True):
-    """Continuous-batching serve throughput per FabricSpec (reduced arch)."""
+    """Serve throughput per (FabricSpec x kv geometry), reduced arch.
+
+    Every spec runs under both ``kv='ring'`` (the legacy fixed-ring oracle)
+    and ``kv='paged'`` at one uniform prompt length — the paged row must not
+    regress tokens/s vs its ring sibling.  One extra ragged-mix paged row
+    (prompt lengths 7/16/33) covers the admission path ring cannot serve.
+    """
     import dataclasses
 
     import jax
-    import numpy as np
 
     from repro.configs import get_config, reduce_config
     from repro.core.fabric import FabricSpec, NoiseSpec
-    from repro.launch.engine import Engine
-    from repro.launch.serve import BatchedServer, Request
     from repro.models.model import init_params
-    from repro.runtime.straggler import StragglerMonitor
 
     cfg0 = reduce_config(get_config("qwen2.5-3b"))
     specs = [
@@ -48,29 +100,47 @@ def serve_spec_rows(smoke: bool = True):
                           noise=NoiseSpec(mismatch_sigma=0.05))),
     ]
     n_req, max_new = (4, 6) if smoke else (8, 16)
+    uniform = [16] * n_req
+    ragged = [(7, 16, 33)[i % 3] for i in range(n_req)]
     params = init_params(jax.random.key(0), cfg0)
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg0.vocab_size, size=16).astype(np.int32)
-               for _ in range(n_req)]
+    matrix = [(label, spec, kv, mix, lens)
+              for label, spec in specs
+              for kv, mix, lens in (("ring", "uniform", uniform),
+                                    ("paged", "uniform", uniform))]
+    matrix.append(("float", None, "paged", "ragged", ragged))
     rows = []
-    for label, spec in specs:
+    for label, spec, kv, mix, lens in matrix:
         cfg = dataclasses.replace(cfg0, fabric=spec, imc_mode="off")
-        engine = Engine(monitor=StragglerMonitor())
-        with engine.activate():
-            server = BatchedServer(cfg, params, slots=4, prompt_len=16,
-                                   max_new=max_new, engine=engine)
-            reqs = [Request(i, p, max_new) for i, p in enumerate(prompts)]
-            _, tps = server.run(reqs)
-        host = engine.monitor.hosts.get(0)
-        rows.append({
-            "spec": label or spec.label,
-            "arch": cfg0.name,
-            "tokens_per_s": round(tps, 2),
-            "step_ms": round(host.ewma_time * 1e3, 3) if host else None,
-            "compiled_steps": engine.stats.compiles,
-            "traces": engine.stats.traces,
-        })
+        row = _serve_once(cfg, params, lens, max_new, kv)
+        rows.append({"spec": label or spec.label, "kv": kv, "mix": mix,
+                     "arch": cfg0.name, **row})
     return rows
+
+
+def compare(old_path: str, new_path: str) -> None:
+    """Diff two BENCH_imc.json runs row-by-row (markdown table to stdout)."""
+    def load(p):
+        with open(p) as f:
+            rec = json.load(f)
+        return {(r["spec"], r.get("kv", "ring"), r.get("mix", "uniform")): r
+                for r in rec["rows"]}
+
+    def pct(old, new):
+        if not old or old in (None, 0) or new is None:
+            return "n/a"
+        return f"{100.0 * (new - old) / old:+.1f}%"
+
+    old, new = load(old_path), load(new_path)
+    print("| spec | kv | mix | tok/s old | tok/s new | Δ | "
+          "step ms old | step ms new | Δ |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(set(old) | set(new)):
+        o, n = old.get(key, {}), new.get(key, {})
+        ot, nt = o.get("tokens_per_s"), n.get("tokens_per_s")
+        om, nm = o.get("step_ms"), n.get("step_ms")
+        print(f"| {key[0]} | {key[1]} | {key[2]} | {ot or '—'} | "
+              f"{nt or '—'} | {pct(ot, nt)} | {om or '—'} | {nm or '—'} | "
+              f"{pct(om, nm)} |")
 
 
 def main(argv=None) -> None:
@@ -83,7 +153,14 @@ def main(argv=None) -> None:
                     metavar="PATH",
                     help="run the per-spec serve bench and write JSON rows "
                          "(tokens/s, step ms) to PATH")
+    ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"), default=None,
+                    help="diff two BENCH_imc.json runs (tokens/s, step ms, "
+                         "%% delta) as a markdown table; runs nothing else")
     args = ap.parse_args(argv)
+
+    if args.compare:
+        compare(*args.compare)
+        return
 
     from benchmarks import bench_imc_throughput, bench_paper_tables, roofline
 
@@ -106,7 +183,7 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(rec, f, indent=1)
         for r in rows:
-            print(f"serve/{r['spec']},{r['step_ms']},"
+            print(f"serve/{r['spec']}/{r['kv']}/{r['mix']},{r['step_ms']},"
                   f"{r['tokens_per_s']} tok/s", flush=True)
 
 

@@ -1,12 +1,20 @@
-"""Batched serving example: continuous-batching decode over a request queue
-(prefill -> slot merge -> lockstep decode -> retire), on a reduced qwen2.5
-config so it runs on CPU in seconds.  The Engine owns mesh, step compilation
-(one executable per kind — no recompiles at steady state), and the noise
-keys, so add ``--imc-mode sim --imc-noise-sigma 0.05`` for a noisy fabric.
+"""Batched serving example on the typed Server API (submit / poll / drain):
+ragged prompts are right-padded to per-bucket prefill executables, KV lives in
+a paged block pool with per-slot block tables, and decode runs all slots in
+lockstep through ONE compiled step.  Runs a reduced qwen2.5 config so it
+finishes on CPU in seconds.
 
-Run:  PYTHONPATH=src python examples/serve_batched.py [--arch gemma3-12b]
+The example serves ``--waves`` identical waves of mixed-length requests and
+asserts that every wave after the first is trace-free: the compiled-step
+cache plus block-table-as-data design means steady-state traffic never
+recompiles, which ``Engine.stats.traces`` pins down.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--lengths 7,16,33]
+Add ``--imc-mode sim --imc-noise-sigma 0.05`` for a noisy fabric, or
+``--kv ring`` for the legacy fixed-ring geometry (uniform lengths only).
 """
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -14,7 +22,7 @@ import numpy as np
 from repro.configs import get_config, reduce_config
 from repro.core.fabric import add_fabric_cli, apply_fabric_cli
 from repro.launch.engine import Engine
-from repro.launch.serve import BatchedServer, Request
+from repro.launch.server import Request, Server
 from repro.models.model import init_params
 from repro.runtime.straggler import StragglerMonitor
 
@@ -22,32 +30,63 @@ from repro.runtime.straggler import StragglerMonitor
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
-    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--lengths", default="7,16,33",
+                    help="comma-separated ragged prompt lengths; one request "
+                         "per length per wave")
+    ap.add_argument("--waves", type=int, default=2,
+                    help="identical request waves; waves after the first "
+                         "must be trace-free")
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--kv", default="paged", choices=["paged", "ring"])
+    ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     add_fabric_cli(ap)
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch))
     cfg = apply_fabric_cli(ap, args, cfg, jitted_what="server")
+    lengths = [int(x) for x in args.lengths.split(",")]
+    if args.kv == "ring":  # legacy geometry serves ONE uniform shape
+        lengths = [lengths[0]] * len(lengths)
+    buckets = sorted({-(-n // 16) * 16 for n in lengths})
     rng = np.random.default_rng(0)
     params = init_params(jax.random.key(0), cfg)
-    reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=24).astype(np.int32),
-                    args.max_new) for i in range(args.requests)]
 
     engine = Engine(noise_seed=args.seed, monitor=StragglerMonitor())
     with engine.activate():
-        server = BatchedServer(cfg, params, slots=args.slots, prompt_len=24,
-                               max_new=args.max_new, engine=engine)
-        done, tps = server.run(reqs)
+        server = Server(cfg, params, engine=engine, slots=args.slots,
+                        kv=args.kv, block_size=args.block_size,
+                        buckets=buckets,
+                        max_seq_len=max(buckets) + args.max_new)
+        warm_traces = None
+        total_tokens, t0 = 0, time.perf_counter()
+        for wave in range(args.waves):
+            handles = [server.submit(Request(
+                prompt=rng.integers(0, cfg.vocab_size, size=n)
+                          .astype(np.int32),
+                max_new_tokens=args.max_new)) for n in lengths]
+            server.drain()
+            assert all(h.done for h in handles), \
+                [(h.status, h.reason) for h in handles]
+            assert all(len(h.tokens) == args.max_new for h in handles)
+            total_tokens += sum(len(h.tokens) for h in handles)
+            if wave == 0:
+                warm_traces = engine.stats.traces
+            else:  # steady state: same length mix -> zero new traces
+                assert engine.stats.traces == warm_traces, (
+                    f"steady-state recompile: traces went {warm_traces} -> "
+                    f"{engine.stats.traces} on wave {wave}")
+    dt = time.perf_counter() - t0
 
-    assert all(len(r.out) == args.max_new for r in done)
-    for r in done:
-        print(f"req{r.rid}: generated {r.out}")
-    print(f"{args.requests} requests through {args.slots} slots; "
-          f"{tps:.1f} tok/s lockstep decode; {engine.stats.compiles} compiled "
-          f"steps, {engine.stats.traces} traces (steady state recompile-free)")
+    for h in server.handles:
+        print(f"req{h.rid} (len={len(h.request.prompt)}): "
+              f"generated {h.tokens}")
+    print(f"{len(server.handles)} requests ({args.waves} waves, lengths "
+          f"{lengths}) through {args.slots} slots [{args.kv}]; "
+          f"{total_tokens / dt:.1f} tok/s end-to-end; "
+          f"{engine.stats.compiles} compiled steps, {engine.stats.traces} "
+          f"traces, waves 2+ trace-free")
     print("serve_batched OK")
 
 

@@ -36,10 +36,9 @@ instead of silently falling back.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from dataclasses import dataclass
 from functools import partial
-from typing import Callable, Dict, Iterable, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -155,43 +154,6 @@ class FabricSpec:
 
     def replace(self, **kw) -> "FabricSpec":
         return dataclasses.replace(self, **kw)
-
-
-def legacy_fabric_spec(*, mode: str = "exact", bits: int = 8,
-                       bits_w: Optional[int] = None, rows: int = C.ROWS,
-                       use_kernel: bool = False, mismatch: bool = False,
-                       comparator_offset_sigma: Optional[float] = None,
-                       ) -> FabricSpec:
-    """Map the pre-FabricSpec loose kwargs onto a spec, old semantics intact.
-
-    The old API silently fell back to the keyed jnp engine when
-    ``use_kernel=True`` was combined with noise, and its exact path ignored
-    the noise kwargs entirely; the mapping preserves both (the new spec API
-    raises on those combos instead).
-    """
-    noise = None
-    if mode == "sim" and (mismatch or comparator_offset_sigma is not None):
-        noise = NoiseSpec(
-            mismatch_sigma=C.MC_SIGMA_VK if mismatch else None,
-            comparator_offset_sigma=comparator_offset_sigma)
-    backend = "pallas" if use_kernel and noise is None else "jnp"
-    return FabricSpec(bits_a=bits, bits_w=bits_w if bits_w is not None else bits,
-                      rows=rows, mode=mode, backend=backend, noise=noise)
-
-
-def warn_deprecated_kwargs(api: str, names: Iterable[str],
-                           stacklevel: int = 3) -> None:
-    """The ONE DeprecationWarning spelling for every pre-spec kwarg surface.
-
-    Each legacy shim (``imc_matmul``, ``imc_linear_apply``, ``dense``) calls
-    this so the message — and its eventual one-release removal — lives in a
-    single place next to :func:`legacy_fabric_spec`.
-    """
-    warnings.warn(
-        f"{api}({', '.join(sorted(names))}=...) is deprecated; pass a "
-        "repro.core.fabric.FabricSpec as `spec` instead (one typed, "
-        "hashable, jit-stable configuration object)",
-        DeprecationWarning, stacklevel=stacklevel)
 
 
 # ---------------------------------------------------------------- registry
@@ -435,3 +397,19 @@ def apply_fabric_cli(ap, args, cfg, *, jitted_what: str = "launcher"):
     # spec built at the edge; imc_mode="off" clears the legacy channel so
     # the typed field (or None, for --imc off) is the one source of truth
     return dataclasses.replace(cfg, fabric=spec, imc_mode="off")
+
+
+# ------------------------------------------------------- legacy re-exports
+# The pre-FabricSpec kwarg shims live in repro.core.legacy (one documented
+# module owning the mapping + DeprecationWarning).  Re-exported lazily here
+# because callers historically imported them from the fabric module; lazy
+# (PEP 562) so the fabric<->legacy import order never matters.
+_LEGACY_EXPORTS = ("legacy_fabric_spec", "warn_deprecated_kwargs")
+
+
+def __getattr__(name):
+    if name in _LEGACY_EXPORTS:
+        from repro.core import legacy
+
+        return getattr(legacy, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -22,8 +22,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.fabric import (FabricSpec, fabric_matmul, legacy_fabric_spec,
-                               warn_deprecated_kwargs)
+from repro.core.fabric import FabricSpec, fabric_matmul
+from repro.core.legacy import legacy_spec_from
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(4,))
@@ -53,16 +53,6 @@ def _bwd(spec, res, g):
 _imc_linear.defvjp(_fwd, _bwd)
 
 
-def _legacy_spec_from(api, bits, mode, use_kernel):
-    legacy = {k: v for k, v in dict(bits=bits, mode=mode,
-                                    use_kernel=use_kernel).items()
-              if v is not None}
-    warn_deprecated_kwargs(api, legacy, stacklevel=4)
-    return legacy_fabric_spec(mode=mode if mode is not None else "exact",
-                              bits=bits if bits is not None else 8,
-                              use_kernel=bool(use_kernel))
-
-
 def imc_linear_apply(x, w, b=None, *legacy_pos, spec: FabricSpec | None = None,
                      key=None, bits: int | None = None,
                      mode: str | None = None, use_kernel: bool | None = None):
@@ -83,7 +73,7 @@ def imc_linear_apply(x, w, b=None, *legacy_pos, spec: FabricSpec | None = None,
         if spec is not None:
             raise TypeError("pass either spec= or legacy bits/mode/use_kernel,"
                             " not both")
-        spec = _legacy_spec_from("imc_linear_apply", bits, mode, use_kernel)
+        spec = legacy_spec_from("imc_linear_apply", bits, mode, use_kernel)
     if spec is None:
         spec = FabricSpec()
     return _imc_linear(x, w, b, key, spec)
@@ -107,6 +97,6 @@ def apply_imc_linear(params, x, *, spec: FabricSpec | None = None, key=None,
         if spec is not None:
             raise TypeError("pass either spec= or legacy bits/mode/use_kernel,"
                             " not both")
-        spec = _legacy_spec_from("apply_imc_linear", bits, mode, use_kernel)
+        spec = legacy_spec_from("apply_imc_linear", bits, mode, use_kernel)
     return imc_linear_apply(x, params["w"], params.get("b"), spec=spec,
                             key=key)

@@ -23,8 +23,8 @@ from __future__ import annotations
 
 from repro.core import constants as C
 from repro.core.energy import FabricReport, fabric_matmul_cost
-from repro.core.fabric import (Fabric, FabricSpec, fabric_matmul, int_matmul,
-                               legacy_fabric_spec, warn_deprecated_kwargs)
+from repro.core.fabric import Fabric, FabricSpec, fabric_matmul, int_matmul
+from repro.core.legacy import legacy_fabric_spec, warn_deprecated_kwargs
 from repro.core.quant import Quantized, quantize
 
 

@@ -1,0 +1,88 @@
+"""The ONE home for every pre-FabricSpec compatibility shim.
+
+PR 2 introduced :class:`repro.core.fabric.FabricSpec` as the single typed
+entry point to the IMC stack; the loose per-call kwargs it replaced
+(``imc_matmul(bits=, mode=, use_kernel=...)``, ``imc_linear_apply`` / the
+positional triple, ``dense(imc_mode=, imc_bits=, use_kernel=...)``) keep
+working for one release with a :class:`DeprecationWarning`.  This module
+finishes that deprecation cycle by collapsing the mapping + warning logic
+of all three surfaces into one documented place:
+
+  * :func:`legacy_fabric_spec` — the semantic mapping from the old kwargs to
+    a spec, preserving the old API's quirks (silent jnp fallback when
+    ``use_kernel=True`` met noise; noise kwargs ignored in exact mode).
+  * :func:`warn_deprecated_kwargs` — the one DeprecationWarning spelling,
+    so the message (and its eventual removal) has a single site.
+  * :func:`legacy_spec_from` — the guard used by every shimmed call site:
+    rejects mixing ``spec=`` with legacy kwargs ("not both"), warns, maps.
+
+Removal plan: the shimmed kwargs disappear from ``imc_matmul`` /
+``imc_linear_apply`` / ``dense`` next release; this module then survives one
+more release re-exporting only :func:`legacy_fabric_spec` for out-of-tree
+callers, and finally goes away.  Identity with the old semantics is pinned
+by ``tests/test_fabric.py`` (the ``match="FabricSpec"`` /
+``match="not both"`` suite).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Iterable, Optional
+
+from repro.core import constants as C
+from repro.core.fabric import FabricSpec, NoiseSpec
+
+__all__ = ["legacy_fabric_spec", "warn_deprecated_kwargs", "legacy_spec_from"]
+
+
+def legacy_fabric_spec(*, mode: str = "exact", bits: int = 8,
+                       bits_w: Optional[int] = None, rows: int = C.ROWS,
+                       use_kernel: bool = False, mismatch: bool = False,
+                       comparator_offset_sigma: Optional[float] = None,
+                       ) -> FabricSpec:
+    """Map the pre-FabricSpec loose kwargs onto a spec, old semantics intact.
+
+    The old API silently fell back to the keyed jnp engine when
+    ``use_kernel=True`` was combined with noise, and its exact path ignored
+    the noise kwargs entirely; the mapping preserves both (the new spec API
+    raises on those combos instead).
+    """
+    noise = None
+    if mode == "sim" and (mismatch or comparator_offset_sigma is not None):
+        noise = NoiseSpec(
+            mismatch_sigma=C.MC_SIGMA_VK if mismatch else None,
+            comparator_offset_sigma=comparator_offset_sigma)
+    backend = "pallas" if use_kernel and noise is None else "jnp"
+    return FabricSpec(bits_a=bits, bits_w=bits_w if bits_w is not None else bits,
+                      rows=rows, mode=mode, backend=backend, noise=noise)
+
+
+def warn_deprecated_kwargs(api: str, names: Iterable[str],
+                           stacklevel: int = 3) -> None:
+    """The ONE DeprecationWarning spelling for every pre-spec kwarg surface.
+
+    Each legacy shim (``imc_matmul``, ``imc_linear_apply``, ``dense``) calls
+    this so the message — and its eventual one-release removal — lives in a
+    single place next to :func:`legacy_fabric_spec`.
+    """
+    warnings.warn(
+        f"{api}({', '.join(sorted(names))}=...) is deprecated; pass a "
+        "repro.core.fabric.FabricSpec as `spec` instead (one typed, "
+        "hashable, jit-stable configuration object)",
+        DeprecationWarning, stacklevel=stacklevel)
+
+
+def legacy_spec_from(api: str, bits: Optional[int] = None,
+                     mode: Optional[str] = None,
+                     use_kernel: Optional[bool] = None,
+                     stacklevel: int = 4) -> FabricSpec:
+    """The (bits, mode, use_kernel) triple shared by ``imc_linear_apply`` /
+    ``apply_imc_linear``: warn once, map onto a spec.  Call sites are
+    responsible for the ``spec`` / legacy mutual-exclusion TypeError (its
+    "not both" message is pinned by tests)."""
+    legacy = {k: v for k, v in dict(bits=bits, mode=mode,
+                                    use_kernel=use_kernel).items()
+              if v is not None}
+    warn_deprecated_kwargs(api, legacy, stacklevel=stacklevel)
+    return legacy_fabric_spec(mode=mode if mode is not None else "exact",
+                              bits=bits if bits is not None else 8,
+                              use_kernel=bool(use_kernel))

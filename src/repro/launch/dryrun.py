@@ -37,7 +37,7 @@ def applicable(arch: str, shape_name: str) -> bool:
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              out_dir: str = OUT_DIR, overrides: dict | None = None,
-             tag: str = "") -> dict:
+             tag: str = "", paged_kv: bool = False) -> dict:
     import dataclasses
 
     cfg = get_config(arch)
@@ -46,7 +46,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     shape = SHAPES[shape_name]
     engine = Engine(mesh=make_production_mesh(multi_pod=multi_pod))
     n_dev = engine.mesh.size
-    aot = engine.aot_compile(cfg, shape)
+    if paged_kv and shape.kind != "decode":
+        raise ValueError("--paged-kv applies to decode shapes only")
+    aot = engine.aot_compile(cfg, shape, paged_kv=paged_kv)
     compiled = aot.compiled
     t_lower, t_compile = aot.lower_s, aot.compile_s
 
@@ -68,7 +70,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         dict(costs.coll_by_type), model_flops_total=mf, n_devices=n_dev)
 
     rec = {
-        "arch": arch, "shape": shape_name, "variant": tag or "baseline",
+        "arch": arch, "shape": shape_name,
+        "variant": (tag or "baseline") + ("+paged_kv" if paged_kv else ""),
         "overrides": {k: str(v) for k, v in (overrides or {}).items()},
         "mesh": "2x16x16" if multi_pod else "16x16",
         "n_devices": n_dev, "kind": shape.kind,
@@ -113,6 +116,9 @@ def main():
     ap.add_argument("--override", action="append", default=[],
                     help="cfg field override key=value (repeatable)")
     ap.add_argument("--tag", default="", help="variant tag for the output file")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="lower decode cells against the paged KV pool + "
+                         "block table instead of the per-slot ring")
     args = ap.parse_args()
 
     overrides = {}
@@ -141,6 +147,8 @@ def main():
             if not applicable(arch, shape_name):
                 print(f"SKIP  {arch} x {shape_name} (long-context N/A)")
                 continue
+            if args.paged_kv and SHAPES[shape_name].kind != "decode":
+                continue
             for mp in meshes:
                 mesh_tag = "2x16x16" if mp else "16x16"
                 suffix = f"__{args.tag}" if args.tag else ""
@@ -151,7 +159,8 @@ def main():
                     continue
                 try:
                     rec = run_cell(arch, shape_name, mp, args.out,
-                                   overrides=overrides, tag=args.tag)
+                                   overrides=overrides, tag=args.tag,
+                                   paged_kv=args.paged_kv)
                     r = rec["roofline"]
                     print(f"PASS  {tag}: {rec['memory']['peak_per_device_gb']}"
                           f" GiB/dev, dominant={r['dominant']}, "

@@ -141,18 +141,45 @@ class Engine:
             lambda: jax.jit(self._counted(make_train_step(cfg, opt_cfg)),
                             donate_argnums=donate_argnums))
 
-    def prefill_step(self, cfg: ModelConfig, max_new_tokens: int = 0):
-        """Jitted ``(params, batch, key) -> (last_logits, cache)``."""
+    def prefill_step(self, cfg: ModelConfig, max_new_tokens: int = 0,
+                     bucket: Optional[int] = None):
+        """Jitted ``(params, batch, key) -> (last_logits, cache)``.
+
+        ``bucket`` keys one executable per padded prompt length: ragged
+        admission pads each prompt up to its bucket and reuses that bucket's
+        executable, so mixed-length traffic compiles ``len(buckets)`` prefill
+        steps up front and never again (the zero-steady-state-recompile
+        guarantee the serve tests assert via :attr:`stats`).
+        """
+        extras = (max_new_tokens,) if bucket is None \
+            else (max_new_tokens, bucket)
         return self._cached_step(
-            cfg, "prefill", (max_new_tokens,),
+            cfg, "prefill", extras,
             lambda: jax.jit(self._counted(
                 make_prefill_step(cfg, max_new_tokens))))
 
     def decode_step(self, cfg: ModelConfig):
-        """Jitted ``(params, cache, token, key) -> (logits, cache)``."""
+        """Jitted ``(params, cache, token, key) -> (logits, cache)``.
+
+        The same callable serves the ring cache and the paged cache (pass
+        ``block_table=`` for the latter) — distinct cache pytrees are
+        distinct traces of one cached step.
+        """
         return self._cached_step(
             cfg, "decode", (),
             lambda: jax.jit(self._counted(make_serve_step(cfg))))
+
+    def admit_step(self, cfg: ModelConfig):
+        """Jitted paged admission: ``(batch_cache, one_cache, table_row,
+        slot) -> batch_cache`` — pure pytree surgery (scatter one request's
+        freshly prefilled ring cache into the shared pools), compiled once
+        so steady-state admits are data-only.
+        """
+        from repro.models.kv_cache import merge_prefill_cache
+
+        return self._cached_step(
+            cfg, "admit", (),
+            lambda: jax.jit(self._counted(merge_prefill_cache)))
 
     # ------------------------------------------------------------ sharding
     def shard_params(self, cfg: ModelConfig, params):
@@ -165,16 +192,17 @@ class Engine:
                               partition_batch(batch, cfg, shape, self.mesh))
 
     def aot_compile(self, cfg: ModelConfig, shape: ShapeConfig, *,
-                    donate: bool = True) -> AotResult:
+                    donate: bool = True, paged_kv: bool = False) -> AotResult:
         """Dry-run path: lower + compile one (cfg, shape) cell ahead of time.
 
         Explicit ``in_shardings`` come from the partitioning rules — sharding
         mismatches, non-divisible layouts, and partitioner failures surface
-        as hard errors here.
+        as hard errors here.  ``paged_kv`` lowers decode cells against the
+        paged pool + block-table state instead of the per-slot ring.
         """
         import time
 
-        specs = input_specs(cfg, shape)
+        specs = input_specs(cfg, shape, paged_kv=paged_kv)
         shardings = partition_inputs(specs, cfg, shape, self.mesh)
         step = step_fn_for(cfg, shape)
         donate_argnums = (0, 1) if (donate and shape.kind != "prefill") else ()

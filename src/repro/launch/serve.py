@@ -1,18 +1,17 @@
-"""Batched serving driver: continuous-batching decode loop over a request queue.
+"""Legacy batched serving driver (fixed-ring slots, uniform prompt length).
 
-Models the production serving shape: prefill each arriving request, merge its
-KV cache into the running batch at a free slot, decode all active slots in
-lockstep with ONE sharded serve_step per token, retire finished requests.
-Slot merge/retire is pure pytree surgery, so the decode step stays a single
-compiled executable (no recompiles at steady state — asserted by tests via
-``Engine.stats``).
+:class:`BatchedServer` models the pre-paging serving shape: one fixed-length
+KV ring of ``prompt_len + max_new`` rows per slot, a single shared prompt
+length, and a batch-style ``run(requests)`` entry point.  It remains here as
+the **oracle** — the paged serving stack in :mod:`repro.launch.server` is
+asserted bit-identical to it — but new code should use the typed
+:class:`~repro.launch.server.Server` API (``submit``/``poll``/``drain``),
+which adds ragged admission, per-request budgets, and block-pool memory
+accounting.  ``BatchedServer.run`` emits a :class:`DeprecationWarning`
+pointing there.
 
-The :class:`~repro.launch.engine.Engine` owns mesh, step compilation, and the
-per-invocation PRNG keys, so noisy fabrics (``--imc-noise-sigma``) serve
-seed-reproducibly.  Runtime hooks ride the loop: every decode step's wall
-time feeds the Engine's straggler monitor, and ``fail_at=`` injects crashes
-(chaos drills) that the server survives by re-queuing in-flight requests —
-greedy decode makes the recovered token streams bit-identical.
+The CLI below serves through the new Server (``--kv ring`` for the legacy
+geometry):
 
     python -m repro.launch.serve --arch qwen2.5-3b --reduce --requests 6
     python -m repro.launch.serve --arch qwen2.5-3b --reduce --requests 6 \
@@ -22,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -32,6 +32,8 @@ import numpy as np
 from repro.configs import get_config, reduce_config
 from repro.core.fabric import add_fabric_cli, apply_fabric_cli
 from repro.launch.engine import Engine
+from repro.models.kv_cache import broadcast_slots as _broadcast_slots
+from repro.models.kv_cache import set_slot
 from repro.models.model import init_params
 from repro.runtime.fault_tolerance import InjectedFailure
 from repro.runtime.straggler import StragglerMonitor
@@ -46,25 +48,10 @@ class Request:
     done: bool = False
 
 
-def _batch_axis(one) -> int:
-    """Batch axis of a B=1 cache leaf: grouped leaves are (G, 1, ...) ->
-    axis 1; tail leaves are (1, ...) -> axis 0 (pos scalars handled upstream).
-    """
-    return 1 if one.ndim >= 2 and one.shape[1] == 1 else 0
-
-
 def _set_slot(b, o, slot):
-    """Write one request's cache leaf (B=1) into the batch cache at ``slot``.
-
-    The scalar ``pos`` of a fresh (B=1) cache lands in the batch cache's
-    per-slot pos vector, so slots admitted at different ticks decode at
-    their own sequence positions.
-    """
-    if b.ndim == 0:
-        return b
-    idx = [slice(None)] * b.ndim
-    idx[_batch_axis(o) if o.ndim else 0] = slice(slot, slot + 1)
-    return b.at[tuple(idx)].set(o)
+    """Write one request's cache leaf (B=1) into the batch cache at ``slot``
+    (shared slot-surgery primitives live in :mod:`repro.models.kv_cache`)."""
+    return set_slot(b, o, slot)
 
 
 class BatchedServer:
@@ -143,7 +130,17 @@ class BatchedServer:
 
         ``fail_at``: decode-step indices at which to inject a crash once
         (chaos drill exercising the recovery path).
+
+        .. deprecated:: use :class:`repro.launch.server.Server`
+           (``submit``/``poll``/``drain``) — typed per-request budgets,
+           ragged prompts, and paged KV memory accounting behind the same
+           lockstep decode loop.
         """
+        warnings.warn(
+            "BatchedServer.run is deprecated; use repro.launch.server.Server"
+            " (submit/poll/drain) — BatchedServer remains only as the"
+            " fixed-ring oracle for the paged serving tests.",
+            DeprecationWarning, stacklevel=2)
         pending = list(requests)
         fail_at = set(fail_at or ())
         nstep = 0
@@ -168,16 +165,10 @@ class BatchedServer:
         return requests, ntok / max(dt, 1e-9)
 
 
-def _broadcast_slots(one, slots):
-    if one.ndim == 0:  # scalar pos -> per-slot position vector
-        return jnp.zeros((slots,), one.dtype)
-    axis = _batch_axis(one)
-    reps = [1] * one.ndim
-    reps[axis] = slots
-    return jnp.tile(jnp.zeros_like(one), reps)
-
-
 def main():
+    from repro.launch.server import Request as ServeRequest
+    from repro.launch.server import Server
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--reduce", action="store_true", default=True)
@@ -185,6 +176,9 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--kv", default="paged", choices=["paged", "ring"],
+                    help="paged block-table cache or the legacy fixed ring")
+    ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0,
                     help="noise-key seed (noisy serve is reproducible in it)")
     add_fabric_cli(ap)
@@ -196,18 +190,25 @@ def main():
     cfg = apply_fabric_cli(ap, args, cfg, jitted_what="server")
     rng = np.random.default_rng(0)
     params = init_params(jax.random.key(0), cfg)
-    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
-                                    size=args.prompt_len).astype(np.int32),
-                    args.max_new) for i in range(args.requests)]
     engine = Engine(noise_seed=args.seed, monitor=StragglerMonitor())
+    bucket = max(16, args.prompt_len)
+    t0 = time.time()
     with engine.activate():
-        server = BatchedServer(cfg, params, slots=args.slots,
-                               prompt_len=args.prompt_len,
-                               max_new=args.max_new, engine=engine)
-        done, tps = server.run(reqs)
-    for r in done:
-        print(f"req{r.rid}: {len(r.out)} tokens -> {r.out[:8]}...")
-    print(f"throughput: {tps:.1f} tok/s (batched lockstep decode; "
+        server = Server(cfg, params, engine=engine, slots=args.slots,
+                        kv=args.kv, block_size=args.block_size,
+                        buckets=(bucket,),
+                        max_seq_len=bucket + args.max_new)
+        handles = [server.submit(ServeRequest(
+            rng.integers(0, cfg.vocab_size,
+                         size=args.prompt_len).astype(np.int32),
+            max_new_tokens=args.max_new)) for _ in range(args.requests)]
+        server.drain()
+    dt = time.time() - t0
+    ntok = sum(len(h.tokens) for h in handles)
+    for h in handles:
+        print(f"req{h.rid}: {len(h.tokens)} tokens -> {h.tokens[:8]}...")
+    print(f"throughput: {ntok / max(dt, 1e-9):.1f} tok/s "
+          f"({args.kv} lockstep decode; "
           f"{engine.stats.compiles} compiled steps, "
           f"{engine.stats.traces} traces)")
 

@@ -1,0 +1,331 @@
+"""Typed serving API: ``Server.submit(Request) -> Handle``, ``poll``, ``drain``.
+
+This replaces the ``BatchedServer.run(requests)`` batch call with an admission
+queue over a **paged KV cache** (see :mod:`repro.models.kv_cache`):
+
+  * :class:`Request` carries per-request ``prompt``, ``max_new_tokens``,
+    ``eos_id``, ``seed`` and ``temperature`` — no server-wide prompt length
+    or decode budget.
+  * :meth:`Server.submit` does **block budgeting**: a request is admitted
+    only when the allocator can hand it ``ceil(len / block_size)`` blocks now
+    and *reserve* the worst-case remainder (``len + max_new_tokens`` rows),
+    so an admitted request can never run dry mid-decode.  Requests that can
+    never fit are rejected at submit; the rest queue until blocks free up.
+  * ragged admission: each prompt is right-padded to the smallest configured
+    **bucket** and prefilled with a traced ``length`` scalar — one compiled
+    prefill executable per bucket, zero recompiles at steady state
+    (asserted via ``Engine.stats.traces``).
+  * decode runs all active slots in lockstep through ONE compiled step; the
+    per-slot block table rides along as a traced argument, so growing,
+    finishing, and re-admitting requests is data-only.
+  * finished slots release their blocks immediately (``eos_id`` or
+    ``max_new_tokens``), fault injection re-queues in-flight requests
+    (greedy decode makes recovered streams bit-identical), and every decode
+    step's wall time feeds the Engine's straggler monitor.
+
+``kv="ring"`` keeps the legacy geometry (one fixed ring per slot, uniform
+prompt length) behind the same API — it is the oracle the paged path is
+tested against and the baseline the benchmarks compare throughput with.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.engine import Engine
+from repro.models.kv_cache import (BlockAllocator, broadcast_slots,
+                                   init_paged_cache)
+from repro.runtime.fault_tolerance import InjectedFailure
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request (immutable; results live on the Handle)."""
+
+    prompt: np.ndarray  # (S,) int32 token ids
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    seed: int = 0
+    temperature: float = 0.0  # 0 -> greedy argmax
+
+
+@dataclass
+class Handle:
+    """Mutable view of one submitted request's progress."""
+
+    rid: int
+    request: Request
+    status: str = "queued"  # queued | active | done | rejected
+    tokens: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+    reason: str = ""  # set when rejected
+    _next_pos: int = 0  # next KV position this slot writes (host-side)
+    _rng: Optional[np.random.Generator] = None
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+
+class Server:
+    """Continuous-batching server over a paged (or legacy ring) KV cache.
+
+    Parameters
+    ----------
+    slots: max concurrent requests (the lockstep decode batch).
+    kv: ``"paged"`` (block tables, ragged admission) or ``"ring"``
+        (legacy fixed-ring oracle; requires uniform ``len(prompt)`` and
+        ``max_new_tokens`` across requests).
+    block_size / num_blocks: paged pool geometry.  ``num_blocks`` defaults
+        to ``slots * ceil(max_seq_len / block_size)`` (never blocks on
+        admission); pass less to exercise queueing.
+    buckets: padded prompt lengths to compile prefill for (ascending).
+    max_seq_len: hard per-request cap on ``len(prompt) + max_new_tokens``;
+        fixes the decode step's logical attention span.
+    fail_at: decode tick indices at which to inject a crash (chaos drill).
+    """
+
+    def __init__(self, cfg, params, *, engine: Optional[Engine] = None,
+                 slots: int = 4, kv: str = "paged", block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 buckets: Sequence[int] = (16, 32, 64),
+                 max_seq_len: Optional[int] = None,
+                 fail_at: Optional[Sequence[int]] = None):
+        if kv not in ("paged", "ring"):
+            raise ValueError(f"kv must be 'paged' or 'ring', got {kv!r}")
+        self.cfg, self.params = cfg, params
+        self.engine = engine or Engine()
+        self.slots = slots
+        self.kv = kv
+        self.buckets = tuple(sorted(buckets))
+        self.max_seq_len = max_seq_len or (max(self.buckets) + 64)
+        self.block_size = block_size
+        self.max_blocks = -(-self.max_seq_len // block_size)
+        self.num_blocks = num_blocks or slots * self.max_blocks
+        self.alloc = BlockAllocator(self.num_blocks, block_size, slots,
+                                    max_blocks_per_slot=self.max_blocks)
+        self.cache = None
+        self.active: List[Optional[Handle]] = [None] * slots
+        self.queued: List[Handle] = []
+        self.handles: List[Handle] = []
+        self.recoveries = 0
+        self.decode_ticks = 0
+        self.decode_s = 0.0  # accumulated lockstep-decode wall time
+        self._fail_at = set(fail_at or ())
+        self._tick = 0  # one noise key per jitted invocation
+        self._ring_shape: Optional[Tuple[int, int]] = None
+        self._decode = self.engine.decode_step(cfg)
+        self._admit_fn = self.engine.admit_step(cfg)
+        self._prefills: Dict[int, object] = {}
+
+    # ----------------------------------------------------------- public API
+    def submit(self, request: Request) -> Handle:
+        """Queue a request; returns its Handle (possibly already rejected)."""
+        h = Handle(len(self.handles), request)
+        self.handles.append(h)
+        plen = int(len(request.prompt))
+        worst = plen + request.max_new_tokens
+        if self.kv == "paged":
+            if plen > max(self.buckets):
+                h.status, h.reason = "rejected", (
+                    f"prompt length {plen} exceeds the largest prefill "
+                    f"bucket {max(self.buckets)}")
+                return h
+            if worst > self.max_seq_len or \
+                    self.alloc.blocks_for(worst) > self.num_blocks:
+                h.status, h.reason = "rejected", (
+                    f"worst case {worst} tokens can never fit "
+                    f"(max_seq_len={self.max_seq_len}, "
+                    f"pool={self.num_blocks}x{self.block_size})")
+                return h
+        else:
+            if self._ring_shape is None:  # first request pins the geometry
+                self._ring_shape = (plen, request.max_new_tokens)
+            if (plen, request.max_new_tokens) != self._ring_shape:
+                h.status, h.reason = "rejected", (
+                    f"kv='ring' serves one uniform shape "
+                    f"{self._ring_shape}, got {(plen, request.max_new_tokens)}"
+                    " — use kv='paged' for ragged traffic")
+                return h
+        self.queued.append(h)
+        return h
+
+    def poll(self) -> List[Handle]:
+        """Advance one tick (admit + one lockstep decode); returns handles
+        that finished on this tick."""
+        self._pump()
+        if not any(self.active):
+            return []
+        try:
+            if self.decode_ticks in self._fail_at:
+                self._fail_at.discard(self.decode_ticks)
+                self.decode_ticks += 1
+                raise InjectedFailure(
+                    f"injected failure at decode tick {self.decode_ticks - 1}")
+            return self._step()
+        except InjectedFailure:
+            self._recover()
+            return []
+
+    def drain(self) -> List[Handle]:
+        """Serve every queued/active request to completion; returns all
+        handles in submit order."""
+        while self.queued or any(self.active):
+            self.poll()
+        return list(self.handles)
+
+    # ------------------------------------------------------------ admission
+    def _prefill_step(self, bucket: int):
+        if bucket not in self._prefills:
+            if self.kv == "paged":
+                step = self.engine.prefill_step(self.cfg, max_new_tokens=0,
+                                                bucket=bucket)
+            else:
+                plen, max_new = self._ring_shape
+                step = self.engine.prefill_step(self.cfg,
+                                                max_new_tokens=max_new)
+            self._prefills[bucket] = step
+        return self._prefills[bucket]
+
+    def _bucket_for(self, plen: int) -> int:
+        for b in self.buckets:
+            if plen <= b:
+                return b
+        raise ValueError(f"no bucket holds a length-{plen} prompt")
+
+    def _next_key(self, slot: int = 0):
+        k = self.engine.noise_key(self._tick, slot)
+        self._tick += 1
+        return k
+
+    def _pump(self):
+        """Admit queued requests into free slots while blocks allow."""
+        for slot in range(self.slots):
+            if not self.queued:
+                return
+            if self.active[slot] is not None:
+                continue
+            h = self.queued[0]
+            plen = len(h.request.prompt)
+            if self.kv == "paged":
+                need = self.alloc.blocks_for(plen)
+                reserve = self.alloc.blocks_for(
+                    plen + h.request.max_new_tokens) - need
+                if not self.alloc.can_admit(need + reserve):
+                    return  # FIFO: wait for blocks instead of starving h
+                self.alloc.alloc(slot, need, reserve=reserve)
+            self.queued.pop(0)
+            self._admit(h, slot)
+
+    def _admit(self, h: Handle, slot: int):
+        req = h.request
+        plen = len(req.prompt)
+        prompt = np.asarray(req.prompt, np.int32)
+        if self.kv == "paged":
+            bucket = self._bucket_for(plen)
+            padded = np.zeros((bucket,), np.int32)
+            padded[:plen] = prompt
+            batch = {"tokens": jnp.asarray(padded[None]),
+                     "length": jnp.asarray(plen, jnp.int32)}
+            table_row = jnp.asarray(self.alloc.table_row(slot))
+        else:
+            batch = {"tokens": jnp.asarray(prompt[None])}
+            table_row = jnp.zeros((self.max_blocks,), jnp.int32)  # unused
+        bucket = None if self.kv == "ring" else len(padded)
+        logits, cache1 = self._prefill_step(bucket)(
+            self.params, batch, self._next_key(slot))
+        if self.cache is None:
+            if self.kv == "paged":
+                self.cache = init_paged_cache(cache1, self.slots,
+                                              self.num_blocks,
+                                              self.block_size)
+            else:
+                self.cache = jax.tree.map(
+                    lambda o: broadcast_slots(o, self.slots), cache1)
+        self.cache = self._admit_fn(self.cache, cache1, table_row,
+                                    jnp.asarray(slot, jnp.int32))
+        h._rng = np.random.default_rng(req.seed)
+        h.tokens = [self._sample(h, np.asarray(logits[0]))]
+        h._next_pos = plen
+        h.status, h.slot = "active", slot
+        self.active[slot] = h
+        if self._finished(h):
+            self._retire(h)
+
+    # --------------------------------------------------------------- decode
+    def _sample(self, h: Handle, logits_row: np.ndarray) -> int:
+        if h.request.temperature <= 0:
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / h.request.temperature
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(h._rng.choice(len(p), p=p))
+
+    def _finished(self, h: Handle) -> bool:
+        if len(h.tokens) >= h.request.max_new_tokens:
+            return True
+        return h.request.eos_id is not None and \
+            h.tokens[-1] == h.request.eos_id
+
+    def _retire(self, h: Handle):
+        h.status = "done"
+        if self.kv == "paged":
+            self.alloc.release(h.slot)
+        self.active[h.slot] = None
+
+    def _step(self) -> List[Handle]:
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i, h in enumerate(self.active):
+            if h is not None:
+                toks[i, 0] = h.tokens[-1]
+                if self.kv == "paged":  # grow the table across a boundary
+                    while self.alloc.blocks_for(h._next_pos + 1) > \
+                            len(self.alloc.slot_blocks(i)):
+                        self.alloc.append(i)
+        t0 = time.perf_counter()
+        if self.kv == "paged":
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks), self._next_key(),
+                jnp.asarray(self.alloc.table()))
+        else:
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks), self._next_key())
+        logits = np.asarray(logits)  # block on the step before timing it
+        dt = time.perf_counter() - t0
+        self.decode_s += dt
+        self.engine.observe_step_time(dt)
+        self.decode_ticks += 1
+        finished = []
+        for i, h in enumerate(self.active):
+            if h is None:
+                continue
+            h.tokens.append(self._sample(h, logits[i]))
+            h._next_pos += 1
+            if self._finished(h):
+                self._retire(h)
+                finished.append(h)
+        return finished
+
+    # -------------------------------------------------------------- faults
+    def _recover(self):
+        """Re-queue in-flight requests from scratch (streams are replayed
+        deterministically: per-request rngs reset with the request seed)."""
+        requeued = []
+        for i, h in enumerate(self.active):
+            if h is not None:
+                h.tokens = []
+                h.status, h.slot, h._rng = "queued", None, None
+                requeued.append(h)
+            self.active[i] = None
+            if self.kv == "paged":
+                self.alloc.release(i)
+        self.cache = None
+        self.queued = requeued + self.queued
+        self.recoveries += 1
+        self.alloc.check()

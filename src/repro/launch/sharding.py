@@ -180,7 +180,10 @@ def partition_inputs(specs: Any, cfg: ModelConfig, shape: ShapeConfig, mesh):
         params, batch, _ = specs
         return (partition_params(params, cfg, mesh),
                 partition_batch(batch, cfg, shape, mesh), key)
-    params, cache, token, _ = specs
-    return (partition_params(params, cfg, mesh),
-            partition_cache(cache, cfg, shape, mesh),
-            partition_batch(token, cfg, shape, mesh), key)
+    params, cache, token, *rest = specs
+    out = (partition_params(params, cfg, mesh),
+           partition_cache(cache, cfg, shape, mesh),
+           partition_batch(token, cfg, shape, mesh), key)
+    if len(rest) > 1:  # paged decode: trailing (B, max_blocks) block table
+        out = out + (NamedSharding(mesh, P()),)
+    return out

@@ -51,9 +51,10 @@ def make_prefill_step(cfg: ModelConfig, max_new_tokens: int = 0):
 
 
 def make_serve_step(cfg: ModelConfig):
-    def serve_step(params, cache, token, key=None):
+    def serve_step(params, cache, token, key=None, block_table=None):
         with _noise_ctx(key):
-            return decode_step(params, cache, token, cfg)
+            return decode_step(params, cache, token, cfg,
+                               block_table=block_table)
 
     return serve_step
 
@@ -103,6 +104,35 @@ def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
     return jax.eval_shape(build, params_specs(cfg))
 
 
+def paged_cache_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                      block_size: int = 16, num_blocks: int | None = None):
+    """Abstract paged decode state for a cell: (pool StackCache, block table).
+
+    Geometry mirrors :class:`repro.launch.server.Server` defaults — the
+    logical span is ``seq_len`` rounded up to whole blocks, the pool holds
+    ``slots * max_blocks`` blocks unless narrowed.
+    """
+    from repro.models.kv_cache import init_paged_cache
+
+    b, s = shape.global_batch, shape.seq_len
+    mb = -(-s // block_size)
+    nb = num_blocks or b * mb
+
+    def build(params):
+        if cfg.frontend != "none":
+            batch = {"embeddings": jnp.zeros((1, s, cfg.frontend_dim),
+                                             jnp.bfloat16),
+                     "length": jnp.asarray(s, jnp.int32)}
+        else:
+            batch = {"tokens": jnp.zeros((1, s), jnp.int32),
+                     "length": jnp.asarray(s, jnp.int32)}
+        _, one = prefill(params, batch, cfg, max_new_tokens=0)
+        return init_paged_cache(one, b, nb, block_size)
+
+    cache = jax.eval_shape(build, params_specs(cfg))
+    return cache, _sds((b, mb), jnp.int32)
+
+
 def token_specs(shape: ShapeConfig):
     return _sds((shape.global_batch, 1), jnp.int32)
 
@@ -112,11 +142,12 @@ def key_specs():
     return jax.eval_shape(lambda: jax.random.key(0))
 
 
-def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                paged_kv: bool = False):
     """All abstract inputs for the cell's step function, keyed by kind:
     train  -> (params, opt_state, batch, key)
     prefill-> (params, batch, key)
-    decode -> (params, cache, token, key)
+    decode -> (params, cache, token, key[, block_table] when paged_kv)
     """
     if shape.kind == "train":
         return (params_specs(cfg), opt_specs(cfg), batch_specs(cfg, shape),
@@ -124,6 +155,10 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig):
     if shape.kind == "prefill":
         return (params_specs(cfg), batch_specs(cfg, shape), key_specs())
     if shape.kind == "decode":
+        if paged_kv:
+            cache, table = paged_cache_specs(cfg, shape)
+            return (params_specs(cfg), cache, token_specs(shape),
+                    key_specs(), table)
         return (params_specs(cfg), cache_specs(cfg, shape),
                 token_specs(shape), key_specs())
     raise ValueError(shape.kind)

@@ -140,6 +140,26 @@ class AttnCache(NamedTuple):
     v_scale: jnp.ndarray | None = None
 
 
+class PagedAttnCache(NamedTuple):
+    """One attention layer's paged KV pool, shared by all batch slots.
+
+    ``k``/``v``: (num_blocks, block_size, KV, hd) — bf16, or int8 with
+    per-(block, offset, KV) f16 scale pools.  Logical position ``p`` of batch
+    row ``b`` lives at physical row ``table[b, p // bs] * bs + p % bs``; the
+    per-slot block table (built by
+    :class:`~repro.models.kv_cache.BlockAllocator`) rides into
+    :func:`attn_decode` as a traced argument, so growing/retiring requests
+    never retraces.  There is no ``key_pos`` leaf: validity is derived from
+    ``pos`` and the table (block ``j`` of a slot always covers positions
+    ``[j*bs, (j+1)*bs)``).
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    k_scale: jnp.ndarray | None = None
+    v_scale: jnp.ndarray | None = None
+
+
 def _kv_quant(x):
     """Per-(B,T,KV) int8 quantization of roped K/V (amax over head_dim)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
@@ -177,12 +197,20 @@ def attn_forward(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
 
 def attn_prefill(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
                  window: int = 0, cache_len: int | None = None,
-                 q_chunk: int = 512, kv_dtype: str = "bf16", **imc):
+                 q_chunk: int = 512, kv_dtype: str = "bf16",
+                 true_len=None, **imc):
     """Prefill: forward over the prompt AND build the decode cache.
 
     cache_len defaults to S for global layers, window for local layers.
     ``kv_dtype="int8"`` stores quantized K/V + per-(B,T,KV) scales (halves
     decode HBM traffic; see EXPERIMENTS §Perf).
+
+    ``true_len`` (traced scalar) marks a right-padded prompt: positions
+    ``>= true_len`` get ``key_pos = -1`` so downstream consumers (ring decode
+    masking, the paged-cache scatter) treat the padded tail as empty.  The
+    forward itself needs no extra masking — causal attention already keeps
+    padded keys out of every valid query row — so one bucketed executable
+    serves all prompt lengths up to S bit-identically.
     """
     b, s, _ = x.shape
     positions = jnp.arange(s)[None, :]
@@ -204,6 +232,8 @@ def attn_prefill(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
         cp = jnp.concatenate(
             [jnp.broadcast_to(jnp.arange(s)[None], (b, s)),
              jnp.full((b, pad), -1, jnp.int32)], axis=1)
+    if true_len is not None:
+        cp = jnp.where(cp < jnp.asarray(true_len, jnp.int32), cp, -1)
     if kv_dtype == "int8":
         ck, ks = _kv_quant(ck)
         cv, vs = _kv_quant(cv)
@@ -214,16 +244,88 @@ def attn_prefill(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
     return y, cache
 
 
-def attn_decode(params, x, cache: AttnCache, pos, *, n_heads, n_kv_heads,
-                head_dim, rope_theta, window: int = 0, **imc):
+def _attn_decode_paged(params, x, cache: PagedAttnCache, pos, block_table, *,
+                       n_heads, n_kv_heads, head_dim, rope_theta,
+                       window: int = 0, **imc):
+    """One-token decode against the shared paged pools.
+
+    x: (B, 1, D); pos: (B,) int32; block_table: (B, MB) int32, -1 = empty.
+    Each row writes its new K/V at flat pool row
+    ``table[pos // bs] * bs + pos % bs`` (rows of inactive slots map out of
+    bounds and are dropped), then attends over the fixed logical span
+    ``MB * bs`` gathered through its table.  Gather row ``i`` IS position
+    ``i`` (tables are dense prefixes), so the validity mask is just
+    ``i <= pos`` limited to allocated blocks — bit-identical to the ring
+    oracle because the extra masked rows contribute exact zeros.
+    """
+    b = x.shape[0]
+    nb, bs = cache.k.shape[0], cache.k.shape[1]
+    mb = block_table.shape[1]
+    t_ctx = mb * bs  # fixed logical attention span per compiled step
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = (pos if pos.ndim else jnp.full((b,), pos))[:, None]  # (B,1)
+    q, k_new, v_new = _project_qkv(params, x, n_heads, n_kv_heads, head_dim,
+                                   positions, rope_theta, **imc)
+    tbl = jnp.where(block_table < 0, nb, block_table)  # (B, MB) OOB sentinel
+    p = positions[:, 0]
+    widx = tbl[jnp.arange(b), jnp.clip(p, 0, None) // bs] * bs + p % bs  # (B,)
+
+    def put(pool, new):  # pool (NB, bs, *tail); new (B, *tail)
+        flat = pool.reshape((nb * bs,) + pool.shape[2:])
+        return flat.at[widx].set(new.astype(pool.dtype), mode="drop")
+
+    ctx = jnp.arange(t_ctx)
+    gidx = tbl[:, ctx // bs] * bs + ctx % bs  # (B, T_ctx), OOB >= nb*bs
+    valid = (ctx[None, :] <= positions) & (gidx < nb * bs)  # (B, T_ctx)
+    if window:
+        valid &= ctx[None, :] > positions - window
+    safe = jnp.minimum(gidx, nb * bs - 1)
+
+    int8_cache = cache.k_scale is not None
+    if int8_cache:
+        kq_new, ks_new = _kv_quant(k_new)
+        vq_new, vs_new = _kv_quant(v_new)
+        kq = put(cache.k, kq_new[:, 0])
+        vq = put(cache.v, vq_new[:, 0])
+        ks = put(cache.k_scale, ks_new[:, 0])
+        vs = put(cache.v_scale, vs_new[:, 0])
+        k = _kv_dequant(kq[safe], ks[safe], q.dtype)
+        v = _kv_dequant(vq[safe], vs[safe], q.dtype)
+        new_cache = PagedAttnCache(kq.reshape(cache.k.shape),
+                                   vq.reshape(cache.v.shape),
+                                   ks.reshape(cache.k_scale.shape),
+                                   vs.reshape(cache.v_scale.shape))
+    else:
+        kf = put(cache.k, k_new[:, 0])
+        vf = put(cache.v, v_new[:, 0])
+        k, v = kf[safe], vf[safe]  # (B, T_ctx, KV, hd)
+        new_cache = PagedAttnCache(kf.reshape(cache.k.shape),
+                                   vf.reshape(cache.v.shape))
+    mask = valid[:, None, None, None, :]  # (B,1,1,1,T_ctx)
+    out = _sdpa(q, k, v, mask)
+    y = dense(params["wo"], out.reshape(b, 1, -1), **imc)
+    return y, new_cache
+
+
+def attn_decode(params, x, cache, pos, *, n_heads, n_kv_heads,
+                head_dim, rope_theta, window: int = 0, block_table=None,
+                **imc):
     """One-token decode. x: (B, 1, D); pos: scalar int32 OR (B,) int32 —
     per-row positions support continuous batching, where slots admitted at
     different ticks sit at different sequence positions.
 
-    Writes each row's new K/V into slot ``pos % T_alloc`` (ring semantics for
-    local layers; for global layers T_alloc == context so the slot is just
-    ``pos``).
+    Ring path (``cache`` an :class:`AttnCache`): writes each row's new K/V
+    into slot ``pos % T_alloc`` (ring semantics for local layers; for global
+    layers T_alloc == context so the slot is just ``pos``).  Paged path
+    (``cache`` a :class:`PagedAttnCache`): routes through the per-slot
+    ``block_table`` instead — the ring stays the tested oracle.
     """
+    if isinstance(cache, PagedAttnCache):
+        assert block_table is not None, "paged decode needs a block table"
+        return _attn_decode_paged(params, x, cache, pos, block_table,
+                                  n_heads=n_heads, n_kv_heads=n_kv_heads,
+                                  head_dim=head_dim, rope_theta=rope_theta,
+                                  window=window, **imc)
     b = x.shape[0]
     t_alloc = cache.k.shape[1]
     pos = jnp.asarray(pos, jnp.int32)

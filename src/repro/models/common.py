@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.fabric import (FabricSpec, legacy_fabric_spec,
-                               warn_deprecated_kwargs)
+from repro.core.fabric import FabricSpec
+from repro.core.legacy import legacy_fabric_spec, warn_deprecated_kwargs
 from repro.core.imc_linear import imc_linear_apply
 
 # ------------------------------------------------------------- sharding hints

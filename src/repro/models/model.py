@@ -109,20 +109,38 @@ def forward_logits(params, batch, cfg: ModelConfig):
 
 # ------------------------------------------------------------------ serving
 def prefill(params, batch, cfg: ModelConfig, max_new_tokens: int = 0):
+    """batch: {"tokens": (B,S)} (+ optional "length": () int32 true prompt
+    length for a right-padded bucket — the last-token logits then come from
+    position ``length - 1`` and the cache marks the padded tail empty, so
+    one executable per bucket size serves every shorter prompt).
+    """
+    length = batch.get("length")
     x = _embed_inputs(params, batch, cfg)
     x, cache, _ = stack_forward(params["blocks"], x, cfg, "prefill",
-                                prefill_extra=max_new_tokens)
-    x_last = rmsnorm(params["final_norm"], x[:, -1:])
+                                prefill_extra=max_new_tokens,
+                                true_len=length)
+    if length is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(length, jnp.int32) - 1, 1, axis=1)
+    x_last = rmsnorm(params["final_norm"], x_last)
     logits = (x_last @ _head_weight(params, cfg).astype(x_last.dtype))
     return logits[:, 0].astype(jnp.float32), cache
 
 
-def decode_step(params, cache: StackCache, token, cfg: ModelConfig):
-    """token: (B, 1) int32. Returns (logits (B,V) f32, new cache)."""
+def decode_step(params, cache: StackCache, token, cfg: ModelConfig,
+                block_table=None):
+    """token: (B, 1) int32. Returns (logits (B,V) f32, new cache).
+
+    ``block_table`` ((B, max_blocks) int32) routes attention through paged
+    KV pools when ``cache`` carries them (see models/kv_cache.py).
+    """
     x = params["embed"][token]
     x = shard_hint(x, "residual")
     x, new_cache, _ = stack_forward(params["blocks"], x, cfg, "decode",
-                                    cache=cache, pos=cache.pos)
+                                    cache=cache, pos=cache.pos,
+                                    block_table=block_table)
     x = rmsnorm(params["final_norm"], x)
     logits = (x @ _head_weight(params, cfg).astype(x.dtype))
     return logits[:, 0].astype(jnp.float32), new_cache

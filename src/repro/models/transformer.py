@@ -96,7 +96,8 @@ def _imc_kw(cfg: ModelConfig):
     return {"spec": spec}
 
 
-def _mix(cfg, params, x, kind, mode, cache, pos, prefill_extra=0):
+def _mix(cfg, params, x, kind, mode, cache, pos, prefill_extra=0,
+         true_len=None, block_table=None):
     """The token-mixing half of a block. Returns (y, new_cache)."""
     imc = _imc_kw(cfg)
     window = cfg.window if kind == "local" else 0
@@ -111,11 +112,20 @@ def _mix(cfg, params, x, kind, mode, cache, pos, prefill_extra=0):
                                 use_flash=cfg.use_flash_kernel,
                                 **kw), None
         if mode == "prefill":
-            cache_len = window if window else x.shape[1] + prefill_extra
+            if true_len is not None:
+                # Ragged (right-padded) admission prefill: keep EVERY row,
+                # even for windowed layers — a window-sized ring over the
+                # padded sequence could evict valid positions.  The cache is
+                # ephemeral here (scattered into the paged pools), so the
+                # full-length allocation lives only for one admit.
+                cache_len = x.shape[1]
+            else:
+                cache_len = window if window else x.shape[1] + prefill_extra
             return attn_prefill(params["attn"], x, q_chunk=cfg.q_chunk,
                                 cache_len=cache_len, kv_dtype=cfg.kv_dtype,
-                                **kw)
-        return attn_decode(params["attn"], x, cache, pos, **kw)
+                                true_len=true_len, **kw)
+        return attn_decode(params["attn"], x, cache, pos,
+                           block_table=block_table, **kw)
     if kind == "rglru":
         if mode in ("train", "prefill"):
             y, (h, cs) = rglru_forward(params["rglru"], x, **imc)
@@ -134,12 +144,14 @@ def _mix(cfg, params, x, kind, mode, cache, pos, prefill_extra=0):
 
 
 def apply_block(params, x, kind: str, cfg: ModelConfig, mode: str,
-                cache=None, pos=None, prefill_extra=0):
+                cache=None, pos=None, prefill_extra=0, true_len=None,
+                block_table=None):
     """Pre-norm residual block. Returns (x, new_cache, aux)."""
     aux = {}
     h = rmsnorm(params["norm1"], x)
     y, new_cache = _mix(cfg, params, h, kind, mode, cache, pos,
-                        prefill_extra=prefill_extra)
+                        prefill_extra=prefill_extra, true_len=true_len,
+                        block_table=block_table)
     if cfg.post_norm:
         y = rmsnorm(params["post_norm1"], y)
     x = x + y
@@ -179,8 +191,15 @@ def _acc_aux(acc, aux):
 
 def stack_forward(params, x, cfg: ModelConfig, mode: str,
                   cache: Optional[StackCache] = None, pos=None,
-                  prefill_extra: int = 0):
-    """Run the full stack. Returns (x, new_cache | None, aux)."""
+                  prefill_extra: int = 0, true_len=None, block_table=None):
+    """Run the full stack. Returns (x, new_cache | None, aux).
+
+    ``true_len`` (prefill, traced scalar): the prompt occupies positions
+    ``[0, true_len)`` of a right-padded ``x`` — caches mark the padded tail
+    empty and ``pos`` lands on ``true_len``.  ``block_table`` (decode,
+    (B, max_blocks) int32): routes attention through paged KV pools when the
+    cache holds :class:`~repro.models.attention.PagedAttnCache` leaves.
+    """
     assert mode in ("train", "prefill", "decode")
     build_cache = mode in ("prefill", "decode")
 
@@ -205,7 +224,9 @@ def stack_forward(params, x, cfg: ModelConfig, mode: str,
             for p_idx, kind in enumerate(cfg.pattern):
                 x, nc, aux = apply_block(gparams[p_idx], x, kind, cfg, mode,
                                          cache=gcaches[p_idx], pos=pos,
-                                         prefill_extra=prefill_extra)
+                                         prefill_extra=prefill_extra,
+                                         true_len=true_len,
+                                         block_table=block_table)
                 new_caches.append(nc)
         ys = tuple(new_caches) if build_cache else None
         return (x, _acc_aux(aux_acc, aux)), ys
@@ -224,7 +245,8 @@ def stack_forward(params, x, cfg: ModelConfig, mode: str,
         tc = cache.tail[p_idx] if mode == "decode" else None
         x, nc, aux = apply_block(params["tail"][p_idx], x, kind, cfg, mode,
                                  cache=tc, pos=pos,
-                                 prefill_extra=prefill_extra)
+                                 prefill_extra=prefill_extra,
+                                 true_len=true_len, block_table=block_table)
         aux_acc = _acc_aux(aux_acc, aux)
         tail_caches.append(nc)
 
@@ -232,6 +254,7 @@ def stack_forward(params, x, cfg: ModelConfig, mode: str,
     if build_cache:
         new_pos = (pos + 1) if mode == "decode" else None
         if mode == "prefill":
-            new_pos = jnp.asarray(x.shape[1], jnp.int32)
+            new_pos = jnp.asarray(
+                x.shape[1] if true_len is None else true_len, jnp.int32)
         new_cache = StackCache(group_caches, tuple(tail_caches), new_pos)
     return x, new_cache, aux_acc
