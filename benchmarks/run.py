@@ -29,20 +29,25 @@ def _rows_from(fn, smoke: bool):
 
 
 def _serve_once(cfg, params, lengths, max_new, kv):
-    """One Server run: warmup wave (compiles) + timed wave; returns a row."""
-    import time
+    """One Server run: warmup wave (compiles) + timed wave; returns a row.
 
+    Each run gets its OWN telemetry Registry (no cross-row contamination),
+    and the row carries the serving SLO trio (TTFT/TPOT/occupancy peak) plus
+    the full telemetry snapshot for BENCH_imc.json.
+    """
     import numpy as np
 
     from repro.launch.engine import Engine
     from repro.launch.server import Request, Server
     from repro.runtime.straggler import StragglerMonitor
+    from repro.telemetry import Registry, clock, serving_slos, snapshot
 
     buckets = sorted({-(-n // 16) * 16 for n in lengths})
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
                for n in lengths]
-    engine = Engine(monitor=StragglerMonitor())
+    registry = Registry()
+    engine = Engine(monitor=StragglerMonitor(), registry=registry)
     with engine.activate():
         server = Server(cfg, params, engine=engine, slots=4, kv=kv,
                         block_size=8, buckets=buckets,
@@ -51,19 +56,20 @@ def _serve_once(cfg, params, lengths, max_new, kv):
             server.submit(Request(p, max_new_tokens=max_new))
         server.drain()
         warm = engine.stats.traces
+        registry.reset()  # SLOs cover the timed (steady-state) waves only
         timed = []
-        d0, t0 = server.decode_s, time.perf_counter()
+        d0, t0 = server.decode_s, clock()
         for _ in range(4):  # several timed waves: averages out host jitter
             wave = [server.submit(Request(p, max_new_tokens=max_new))
                     for p in prompts]
             server.drain()
             timed += wave
-        dt = time.perf_counter() - t0
+        dt = clock() - t0
         decode_dt = server.decode_s - d0
     assert engine.stats.traces == warm, "steady-state recompile in bench"
-    # tokens/s is LOCKSTEP-DECODE throughput (BatchedServer.run semantics):
-    # each handle's first token comes from prefill logits, the rest from
-    # decode ticks timed device-side via Server.decode_s.
+    # tokens/s is LOCKSTEP-DECODE throughput: each handle's first token comes
+    # from prefill logits, the rest from decode ticks timed device-side via
+    # Server.decode_s.
     tokens = sum(len(h.tokens) - 1 for h in timed)
     host = engine.monitor.hosts.get(0)
     return {
@@ -72,6 +78,8 @@ def _serve_once(cfg, params, lengths, max_new, kv):
         "step_ms": round(host.ewma_time * 1e3, 3) if host else None,
         "compiled_steps": engine.stats.compiles,
         "traces": engine.stats.traces,
+        **serving_slos(registry),
+        "telemetry": snapshot(registry),
     }
 
 
@@ -132,15 +140,17 @@ def compare(old_path: str, new_path: str) -> None:
 
     old, new = load(old_path), load(new_path)
     print("| spec | kv | mix | tok/s old | tok/s new | Δ | "
-          "step ms old | step ms new | Δ |")
-    print("|---|---|---|---|---|---|---|---|---|")
+          "step ms old | step ms new | Δ | ttft ms old | ttft ms new | Δ | "
+          "tpot ms old | tpot ms new | Δ |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|")
     for key in sorted(set(old) | set(new)):
         o, n = old.get(key, {}), new.get(key, {})
-        ot, nt = o.get("tokens_per_s"), n.get("tokens_per_s")
-        om, nm = o.get("step_ms"), n.get("step_ms")
-        print(f"| {key[0]} | {key[1]} | {key[2]} | {ot or '—'} | "
-              f"{nt or '—'} | {pct(ot, nt)} | {om or '—'} | {nm or '—'} | "
-              f"{pct(om, nm)} |")
+        cells = [key[0], key[1], key[2]]
+        for field in ("tokens_per_s", "step_ms", "ttft_ms", "tpot_ms"):
+            ov, nv = o.get(field), n.get(field)
+            cells += [ov if ov is not None else "—",
+                      nv if nv is not None else "—", pct(ov, nv)]
+        print("| " + " | ".join(str(c) for c in cells) + " |")
 
 
 def main(argv=None) -> None:

@@ -12,6 +12,9 @@ recompiles, which ``Engine.stats.traces`` pins down.
 Run:  PYTHONPATH=src python examples/serve_batched.py [--lengths 7,16,33]
 Add ``--imc-mode sim --imc-noise-sigma 0.05`` for a noisy fabric, or
 ``--kv ring`` for the legacy fixed-ring geometry (uniform lengths only).
+``--trace-out trace.json`` exports the run's prefill/decode spans as Chrome
+trace-event JSON — drop the file into https://ui.perfetto.dev to see the
+serving timeline; ``--telemetry`` prints the metric snapshot as markdown.
 """
 import argparse
 import time
@@ -25,6 +28,7 @@ from repro.launch.engine import Engine
 from repro.launch.server import Request, Server
 from repro.models.model import init_params
 from repro.runtime.straggler import StragglerMonitor
+from repro.telemetry import (export_chrome_trace, serving_slos, to_markdown)
 
 
 def main():
@@ -41,6 +45,11 @@ def main():
     ap.add_argument("--kv", default="paged", choices=["paged", "ring"])
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write prefill/decode spans as Chrome trace-event "
+                         "JSON (loadable in Perfetto / chrome://tracing)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="print the telemetry snapshot as markdown tables")
     add_fabric_cli(ap)
     args = ap.parse_args()
 
@@ -87,6 +96,14 @@ def main():
           f"{total_tokens / dt:.1f} tok/s end-to-end; "
           f"{engine.stats.compiles} compiled steps, {engine.stats.traces} "
           f"traces, waves 2+ trace-free")
+    slos = serving_slos(engine.registry)
+    print(f"SLOs: ttft p50 {slos['ttft_ms']} ms, tpot p50 {slos['tpot_ms']} "
+          f"ms, peak block occupancy {slos['occupancy_peak']}")
+    if args.telemetry:
+        print(to_markdown(registry=engine.registry))
+    if args.trace_out:
+        print(f"chrome trace -> {export_chrome_trace(args.trace_out)} "
+              f"(open in https://ui.perfetto.dev)")
     print("serve_batched OK")
 
 

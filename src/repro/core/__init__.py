@@ -12,7 +12,7 @@ Layers (bottom-up):
   bitserial   — grouped bit-plane MAC with analog decode in the loop
   fabric      — FabricSpec/NoiseSpec + Fabric facade + backend registry:
                 the ONE typed, hashable entry point to the stack
-  imc_matmul  — legacy loose-kwarg shim over fabric_matmul
+  imc_matmul  — spec-typed entry point over fabric_matmul (+ cost sweeps)
   imc_linear  — drop-in Linear on the IMC fabric (STE backward)
 """
 from repro.core import constants

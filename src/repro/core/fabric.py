@@ -397,19 +397,3 @@ def apply_fabric_cli(ap, args, cfg, *, jitted_what: str = "launcher"):
     # spec built at the edge; imc_mode="off" clears the legacy channel so
     # the typed field (or None, for --imc off) is the one source of truth
     return dataclasses.replace(cfg, fabric=spec, imc_mode="off")
-
-
-# ------------------------------------------------------- legacy re-exports
-# The pre-FabricSpec kwarg shims live in repro.core.legacy (one documented
-# module owning the mapping + DeprecationWarning).  Re-exported lazily here
-# because callers historically imported them from the fabric module; lazy
-# (PEP 562) so the fabric<->legacy import order never matters.
-_LEGACY_EXPORTS = ("legacy_fabric_spec", "warn_deprecated_kwargs")
-
-
-def __getattr__(name):
-    if name in _LEGACY_EXPORTS:
-        from repro.core import legacy
-
-        return getattr(legacy, name)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -13,7 +13,8 @@ in training AND serving.  The spec is the custom_vjp's ONLY nondiff argument
 regular primal with a ``None`` cotangent.
 
 The pre-spec positional signature ``imc_linear_apply(x, w, b, bits, mode,
-use_kernel)`` keeps working for one release with a DeprecationWarning.
+use_kernel)`` and the matching loose kwargs finished their deprecation cycle
+and are gone; the spec is the only configuration channel.
 """
 from __future__ import annotations
 
@@ -23,7 +24,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.fabric import FabricSpec, fabric_matmul
-from repro.core.legacy import legacy_spec_from
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(4,))
@@ -53,30 +53,14 @@ def _bwd(spec, res, g):
 _imc_linear.defvjp(_fwd, _bwd)
 
 
-def imc_linear_apply(x, w, b=None, *legacy_pos, spec: FabricSpec | None = None,
-                     key=None, bits: int | None = None,
-                     mode: str | None = None, use_kernel: bool | None = None):
+def imc_linear_apply(x, w, b=None, *, spec: FabricSpec | None = None,
+                     key=None):
     """y = fabric(x @ w) + b with STE backward, configured by ``spec``.
 
     ``key`` is required iff ``spec.noisy`` and threads down to the bit-serial
-    engine's per-plane-pair PRNG folds.  The old positional tail
-    ``(bits, mode, use_kernel)`` and the matching kwargs are deprecated shims.
+    engine's per-plane-pair PRNG folds.
     """
-    if legacy_pos:
-        if len(legacy_pos) > 3:
-            raise TypeError(f"too many positional args: {len(legacy_pos) + 3}")
-        vals = dict(zip(("bits", "mode", "use_kernel"), legacy_pos))
-        bits = vals.get("bits", bits)
-        mode = vals.get("mode", mode)
-        use_kernel = vals.get("use_kernel", use_kernel)
-    if bits is not None or mode is not None or use_kernel is not None:
-        if spec is not None:
-            raise TypeError("pass either spec= or legacy bits/mode/use_kernel,"
-                            " not both")
-        spec = legacy_spec_from("imc_linear_apply", bits, mode, use_kernel)
-    if spec is None:
-        spec = FabricSpec()
-    return _imc_linear(x, w, b, key, spec)
+    return _imc_linear(x, w, b, key, spec if spec is not None else FabricSpec())
 
 
 def init_imc_linear(key, d_in: int, d_out: int, *, use_bias: bool = False,
@@ -90,13 +74,6 @@ def init_imc_linear(key, d_in: int, d_out: int, *, use_bias: bool = False,
     return p
 
 
-def apply_imc_linear(params, x, *, spec: FabricSpec | None = None, key=None,
-                     bits: int | None = None, mode: str | None = None,
-                     use_kernel: bool | None = None):
-    if bits is not None or mode is not None or use_kernel is not None:
-        if spec is not None:
-            raise TypeError("pass either spec= or legacy bits/mode/use_kernel,"
-                            " not both")
-        spec = legacy_spec_from("apply_imc_linear", bits, mode, use_kernel)
+def apply_imc_linear(params, x, *, spec: FabricSpec | None = None, key=None):
     return imc_linear_apply(x, params["w"], params.get("b"), spec=spec,
                             key=key)

@@ -1,63 +1,37 @@
-"""Legacy-compatible IMC matmul entry point — now a thin shim over the Fabric.
+"""IMC matmul entry point — a thin spec-typed wrapper over the Fabric.
 
 The real implementation lives in :mod:`repro.core.fabric`: a frozen, hashable
 :class:`~repro.core.fabric.FabricSpec` names the precision/geometry/fidelity/
 backend/noise of the fabric, and :func:`~repro.core.fabric.fabric_matmul`
 dispatches it through the backend registry (exact int GEMM, plane-batched sim
 engine, or the fused Pallas kernels), with the spec as the ONE static jit
-argument.
+argument:
 
-This module keeps the original loose-kwarg surface alive for one release:
+    from repro.core.fabric import FabricSpec
+    y = imc_matmul(x, w, FabricSpec(mode="sim", backend="pallas"))
 
-    imc_matmul(x, w, bits=8, mode="sim", use_kernel=True)   # DeprecationWarning
-
-maps onto the equivalent spec (including the old silent noisy-kernel -> jnp
-fallback) and produces bit-identical results.  New code should write
-
-    from repro.core.fabric import Fabric, FabricSpec
-    y = Fabric(FabricSpec(mode="sim", backend="pallas")).matmul(x, w)
-
-or pass a spec directly: ``imc_matmul(x, w, spec)``.
+The pre-spec loose kwargs (``bits=``, ``mode=``, ``use_kernel=`` ...) were
+deprecated for one release and are now gone; passing them raises ``TypeError``
+like any unknown keyword.
 """
 from __future__ import annotations
 
 from repro.core import constants as C
 from repro.core.energy import FabricReport, fabric_matmul_cost
 from repro.core.fabric import Fabric, FabricSpec, fabric_matmul, int_matmul
-from repro.core.legacy import legacy_fabric_spec, warn_deprecated_kwargs
 from repro.core.quant import Quantized, quantize
 
+__all__ = ["imc_matmul", "imc_matmul_cost", "quantize_weight", "int_matmul"]
 
-def imc_matmul(x, w, spec: FabricSpec | None = None, *, key=None,
-               bits: int | None = None, mode: str | None = None,
-               rows: int | None = None, mismatch: bool | None = None,
-               comparator_offset_sigma=None, use_kernel: bool | None = None):
+
+def imc_matmul(x, w, spec: FabricSpec | None = None, *, key=None):
     """IMC GEMM: y[..., N] ~= x[..., K] @ w[K, N] through the 8T SRAM fabric.
 
-    Prefer ``imc_matmul(x, w, spec, key=...)``.  The pre-spec kwargs
-    (``bits``/``mode``/``rows``/``mismatch``/``comparator_offset_sigma``/
-    ``use_kernel``) still work with a DeprecationWarning and identical
-    semantics.
+    ``spec`` defaults to the exact digital-equivalent fabric; ``key`` is
+    required iff ``spec.noisy``.
     """
-    legacy = {k: v for k, v in dict(
-        bits=bits, mode=mode, rows=rows, mismatch=mismatch,
-        comparator_offset_sigma=comparator_offset_sigma,
-        use_kernel=use_kernel).items() if v is not None}
-    if legacy:
-        if spec is not None:
-            raise TypeError(
-                f"pass either spec= or the legacy kwargs {sorted(legacy)}, "
-                "not both")
-        warn_deprecated_kwargs("imc_matmul", legacy)
-        spec = legacy_fabric_spec(
-            mode=mode if mode is not None else "exact",
-            bits=bits if bits is not None else 8,
-            rows=rows if rows is not None else C.ROWS,
-            use_kernel=bool(use_kernel), mismatch=bool(mismatch),
-            comparator_offset_sigma=comparator_offset_sigma)
-    elif spec is None:
-        spec = FabricSpec()
-    return fabric_matmul(x, w, spec, key=key)
+    return fabric_matmul(x, w, spec if spec is not None else FabricSpec(),
+                         key=key)
 
 
 def imc_matmul_cost(x_shape, w_shape, *, spec: FabricSpec | None = None,
@@ -67,7 +41,8 @@ def imc_matmul_cost(x_shape, w_shape, *, spec: FabricSpec | None = None,
     """Hardware cost projection for an imc_matmul call (energy/latency model).
 
     With ``spec`` given, delegates to :meth:`Fabric.cost`; the loose
-    ``bits``/``rows``/``cols`` kwargs remain for compatibility.
+    ``bits``/``rows``/``cols`` kwargs remain for cost-model sweeps that have
+    no fabric in hand.
     """
     if spec is not None:
         return Fabric(spec).cost(x_shape, w_shape, n_macros=n_macros,

@@ -27,6 +27,13 @@ PRNG-key plumbing for noisy fabrics.  The Engine owns them once:
   * **runtime hooks** — an optional :class:`StragglerMonitor` fed by
     :meth:`observe_step_time`; flagged hosts accumulate in
     :attr:`swap_requests` for the serving/training loop to act on.
+  * **telemetry** — cache hit/compile/trace counters land in a
+    :class:`repro.telemetry.Registry` (``engine.cache_hits`` /
+    ``engine.compiles`` / ``engine.traces``), every cached step is wrapped in
+    a per-kind dispatch-time histogram (``engine.step_s.<kind>``; host-side
+    wall time around the jitted call — no block, no added sync), and AOT
+    lower/compile run under spans on the telemetry clock.  :attr:`stats`
+    remains the cheap in-process mirror the serve tests assert on.
 """
 from __future__ import annotations
 
@@ -47,6 +54,7 @@ from repro.launch.steps import (input_specs, make_prefill_step,
 from repro.models.common import AxisCtx, axis_ctx
 from repro.optim.adamw import AdamWConfig
 from repro.runtime.straggler import StragglerMonitor
+from repro.telemetry import Registry, clock, get_registry, span
 
 
 @dataclass
@@ -82,10 +90,13 @@ class Engine:
     noise_seed: int = 0
     monitor: Optional[StragglerMonitor] = None
     stats: EngineStats = field(default_factory=EngineStats)
+    registry: Optional[Registry] = None  # None -> the process-global one
 
     def __post_init__(self):
         if self.mesh is None:
             self.mesh = make_test_mesh()
+        if self.registry is None:
+            self.registry = get_registry()
         self._steps: Dict[Tuple, Callable] = {}
         self._base_key = None
         self.swap_requests: List[int] = []
@@ -116,7 +127,29 @@ class Engine:
         @functools.wraps(fn)
         def wrapper(*args):
             self.stats.traces += 1
+            self.registry.counter("engine.traces").inc()
             return fn(*args)
+
+        return wrapper
+
+    def _timed(self, fn, kind: str):
+        """Per-kind dispatch-time histogram around a jitted step.
+
+        Times the host-side call only — the step's result is NOT blocked on,
+        so no device sync is added; callers that want device-complete times
+        (the Server's decode loop) block themselves and feed
+        :meth:`observe_step_time`.
+        """
+        hist = self.registry.histogram(f"engine.step_s.{kind}")
+
+        @functools.wraps(fn)
+        def wrapper(*args):
+            if not self.registry.enabled:
+                return fn(*args)
+            t0 = clock()
+            out = fn(*args)
+            hist.observe(clock() - t0)
+            return out
 
         return wrapper
 
@@ -125,10 +158,12 @@ class Engine:
         key = (cfg, kind, extras, cfg.imc_fabric)
         step = self._steps.get(key)
         if step is None:
-            step = self._steps[key] = build()
+            step = self._steps[key] = self._timed(build(), kind)
             self.stats.compiles += 1
+            self.registry.counter("engine.compiles").inc()
         else:
             self.stats.hits += 1
+            self.registry.counter("engine.cache_hits").inc()
         return step
 
     def train_step(self, cfg: ModelConfig,
@@ -200,21 +235,23 @@ class Engine:
         as hard errors here.  ``paged_kv`` lowers decode cells against the
         paged pool + block-table state instead of the per-slot ring.
         """
-        import time
-
         specs = input_specs(cfg, shape, paged_kv=paged_kv)
         shardings = partition_inputs(specs, cfg, shape, self.mesh)
         step = step_fn_for(cfg, shape)
         donate_argnums = (0, 1) if (donate and shape.kind != "prefill") else ()
-        t0 = time.time()
+        t0 = clock()
         with self.activate():
             jitted = jax.jit(step, in_shardings=shardings,
                              donate_argnums=donate_argnums)
-            lowered = jitted.lower(*specs)
-            t_lower = time.time() - t0
-            compiled = lowered.compile()
-        return AotResult(lowered, compiled, t_lower,
-                         time.time() - t0 - t_lower)
+            with span("engine.aot.lower", arch=cfg.name, shape=shape.name):
+                lowered = jitted.lower(*specs)
+            t_lower = clock() - t0
+            with span("engine.aot.compile", arch=cfg.name, shape=shape.name):
+                compiled = lowered.compile()
+        t_compile = clock() - t0 - t_lower
+        self.registry.histogram("engine.aot.lower_s").observe(t_lower)
+        self.registry.histogram("engine.aot.compile_s").observe(t_compile)
+        return AotResult(lowered, compiled, t_lower, t_compile)
 
     # --------------------------------------------------------------- hooks
     def observe_step_time(self, dt: float, host: int = 0) -> List[int]:
@@ -223,6 +260,7 @@ class Engine:
         Returns hosts newly flagged for a hot-spare swap; they also
         accumulate in :attr:`swap_requests`.
         """
+        self.registry.histogram("engine.observed_step_s").observe(dt)
         if self.monitor is None:
             return []
         flagged = self.monitor.record_step({host: dt})

@@ -1,17 +1,10 @@
-"""Legacy batched serving driver (fixed-ring slots, uniform prompt length).
+"""Serving CLI — drives :class:`repro.launch.server.Server` from the shell.
 
-:class:`BatchedServer` models the pre-paging serving shape: one fixed-length
-KV ring of ``prompt_len + max_new`` rows per slot, a single shared prompt
-length, and a batch-style ``run(requests)`` entry point.  It remains here as
-the **oracle** — the paged serving stack in :mod:`repro.launch.server` is
-asserted bit-identical to it — but new code should use the typed
-:class:`~repro.launch.server.Server` API (``submit``/``poll``/``drain``),
-which adds ragged admission, per-request budgets, and block-pool memory
-accounting.  ``BatchedServer.run`` emits a :class:`DeprecationWarning`
-pointing there.
-
-The CLI below serves through the new Server (``--kv ring`` for the legacy
-geometry):
+The pre-paging ``BatchedServer`` (fixed-ring slots, uniform prompt length,
+batch-style ``run(requests)``) finished its deprecation cycle and is gone;
+``Server(kv="ring")`` reproduces the same fixed-ring geometry behind the
+typed ``submit``/``poll``/``drain`` API, with ragged admission, per-request
+budgets, and block-pool memory accounting on the ``kv="paged"`` path.
 
     python -m repro.launch.serve --arch qwen2.5-3b --reduce --requests 6
     python -m repro.launch.serve --arch qwen2.5-3b --reduce --requests 6 \
@@ -20,154 +13,20 @@ geometry):
 from __future__ import annotations
 
 import argparse
-import time
-import warnings
-from dataclasses import dataclass, field
-from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.core.fabric import add_fabric_cli, apply_fabric_cli
 from repro.launch.engine import Engine
-from repro.models.kv_cache import broadcast_slots as _broadcast_slots
-from repro.models.kv_cache import set_slot
 from repro.models.model import init_params
-from repro.runtime.fault_tolerance import InjectedFailure
 from repro.runtime.straggler import StragglerMonitor
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new: int
-    out: List[int] = field(default_factory=list)
-    done: bool = False
-
-
-def _set_slot(b, o, slot):
-    """Write one request's cache leaf (B=1) into the batch cache at ``slot``
-    (shared slot-surgery primitives live in :mod:`repro.models.kv_cache`)."""
-    return set_slot(b, o, slot)
-
-
-class BatchedServer:
-    """Fixed-slot continuous batching (slots = max concurrent requests)."""
-
-    def __init__(self, cfg, params, slots: int = 4, prompt_len: int = 32,
-                 max_new: int = 16, engine: Optional[Engine] = None):
-        self.cfg, self.params = cfg, params
-        self.engine = engine or Engine()
-        self.slots = slots
-        self.prompt_len = prompt_len
-        self.max_new = max_new
-        self.active: List[Optional[Request]] = [None] * slots
-        self.cache = None
-        self.recoveries = 0
-        self._tick = 0  # one noise key per jitted invocation (prefill/decode)
-        self._decode = self.engine.decode_step(cfg)
-        self._prefill = self.engine.prefill_step(cfg, max_new_tokens=max_new)
-
-    def _next_key(self, slot: int = 0):
-        k = self.engine.noise_key(self._tick, slot)
-        self._tick += 1
-        return k
-
-    def _admit(self, req: Request, slot: int):
-        batch = {"tokens": jnp.asarray(req.prompt[None])}
-        logits, cache1 = self._prefill(self.params, batch,
-                                       self._next_key(slot))
-        req.out.append(int(jnp.argmax(logits[0])))
-        if self.cache is None:
-            # materialize the batch cache by broadcasting the first request
-            self.cache = jax.tree.map(
-                lambda o: _broadcast_slots(o, self.slots), cache1)
-        self.cache = jax.tree.map(
-            lambda b, o: _set_slot(b, o, slot), self.cache, cache1)
-        self.active[slot] = req
-
-    def step(self):
-        """One lockstep decode over all active slots."""
-        toks = np.zeros((self.slots, 1), np.int32)
-        for i, r in enumerate(self.active):
-            if r and not r.done:
-                toks[i, 0] = r.out[-1]
-        t0 = time.perf_counter()
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks), self._next_key())
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        self.engine.observe_step_time(time.perf_counter() - t0)
-        for i, r in enumerate(self.active):
-            if r and not r.done:
-                r.out.append(int(nxt[i]))
-                if len(r.out) >= r.max_new:
-                    r.done = True
-                    self.active[i] = None  # retire slot
-        return nxt
-
-    def _recover(self) -> List[Request]:
-        """Drop the in-flight batch state and re-queue unfinished requests.
-
-        Greedy decode is deterministic, so replaying a request from its
-        prompt reproduces the exact token stream the crash interrupted.
-        """
-        requeued = []
-        for i, r in enumerate(self.active):
-            if r is not None:
-                r.out.clear()
-                r.done = False
-                requeued.append(r)
-            self.active[i] = None
-        self.cache = None
-        self.recoveries += 1
-        return requeued
-
-    def run(self, requests: List[Request], *, fail_at=None):
-        """Serve ``requests`` to completion; returns (requests, tokens/sec).
-
-        ``fail_at``: decode-step indices at which to inject a crash once
-        (chaos drill exercising the recovery path).
-
-        .. deprecated:: use :class:`repro.launch.server.Server`
-           (``submit``/``poll``/``drain``) — typed per-request budgets,
-           ragged prompts, and paged KV memory accounting behind the same
-           lockstep decode loop.
-        """
-        warnings.warn(
-            "BatchedServer.run is deprecated; use repro.launch.server.Server"
-            " (submit/poll/drain) — BatchedServer remains only as the"
-            " fixed-ring oracle for the paged serving tests.",
-            DeprecationWarning, stacklevel=2)
-        pending = list(requests)
-        fail_at = set(fail_at or ())
-        nstep = 0
-        t0 = time.time()
-        while pending or any(self.active):
-            for i in range(self.slots):
-                if self.active[i] is None and pending:
-                    self._admit(pending.pop(0), i)
-            if any(self.active):
-                try:
-                    if nstep in fail_at:
-                        fail_at.discard(nstep)
-                        raise InjectedFailure(
-                            f"injected failure at decode step {nstep}")
-                    self.step()
-                except InjectedFailure:
-                    pending = self._recover() + pending
-                nstep += 1
-        dt = time.time() - t0
-        # delivered tokens only: work discarded by a recovery doesn't count
-        ntok = sum(len(r.out) for r in requests)
-        return requests, ntok / max(dt, 1e-9)
+from repro.telemetry import clock
 
 
 def main():
-    from repro.launch.server import Request as ServeRequest
-    from repro.launch.server import Server
+    from repro.launch.server import Request, Server
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
@@ -192,18 +51,18 @@ def main():
     params = init_params(jax.random.key(0), cfg)
     engine = Engine(noise_seed=args.seed, monitor=StragglerMonitor())
     bucket = max(16, args.prompt_len)
-    t0 = time.time()
+    t0 = clock()
     with engine.activate():
         server = Server(cfg, params, engine=engine, slots=args.slots,
                         kv=args.kv, block_size=args.block_size,
                         buckets=(bucket,),
                         max_seq_len=bucket + args.max_new)
-        handles = [server.submit(ServeRequest(
+        handles = [server.submit(Request(
             rng.integers(0, cfg.vocab_size,
                          size=args.prompt_len).astype(np.int32),
             max_new_tokens=args.max_new)) for _ in range(args.requests)]
         server.drain()
-    dt = time.time() - t0
+    dt = clock() - t0
     ntok = sum(len(h.tokens) for h in handles)
     for h in handles:
         print(f"req{h.rid}: {len(h.tokens)} tokens -> {h.tokens[:8]}...")

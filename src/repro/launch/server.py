@@ -26,10 +26,24 @@ queue over a **paged KV cache** (see :mod:`repro.models.kv_cache`):
 ``kv="ring"`` keeps the legacy geometry (one fixed ring per slot, uniform
 prompt length) behind the same API — it is the oracle the paged path is
 tested against and the baseline the benchmarks compare throughput with.
+
+Serving SLOs are first-class telemetry (all host-side; nothing recorded here
+ever blocks on the device beyond the block the decode loop already does for
+sampling):
+
+  * ``server.ttft_s``   — time-to-first-token histogram (submit -> the
+    prefill-produced token).
+  * ``server.tpot_s``   — time-per-output-token histogram (decode tokens
+    only, per finished request).
+  * ``server.admitted`` / ``server.rejected`` counters,
+    ``server.queue_depth`` gauge.
+  * ``server.block_occupancy`` gauge (+ high-water mark) fed from the
+    :class:`~repro.models.kv_cache.BlockAllocator` free list.
+  * ``server.decode_tokens`` counter + ``server.decode_step_s`` histogram —
+    decode tokens/s is their ratio with :attr:`Server.decode_s`.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -41,6 +55,7 @@ from repro.launch.engine import Engine
 from repro.models.kv_cache import (BlockAllocator, broadcast_slots,
                                    init_paged_cache)
 from repro.runtime.fault_tolerance import InjectedFailure
+from repro.telemetry import clock, span
 
 
 @dataclass(frozen=True)
@@ -66,6 +81,8 @@ class Handle:
     reason: str = ""  # set when rejected
     _next_pos: int = 0  # next KV position this slot writes (host-side)
     _rng: Optional[np.random.Generator] = None
+    _t_submit: float = 0.0  # telemetry clock at submit (TTFT start)
+    _t_first: float = 0.0  # telemetry clock at first token (TPOT start)
 
     @property
     def done(self) -> bool:
@@ -122,11 +139,32 @@ class Server:
         self._decode = self.engine.decode_step(cfg)
         self._admit_fn = self.engine.admit_step(cfg)
         self._prefills: Dict[int, object] = {}
+        reg = self.engine.registry
+        self._m_admitted = reg.counter("server.admitted")
+        self._m_rejected = reg.counter("server.rejected")
+        self._m_recoveries = reg.counter("server.recoveries")
+        self._m_decode_tokens = reg.counter("server.decode_tokens")
+        self._m_queue = reg.gauge("server.queue_depth")
+        self._m_occupancy = reg.gauge("server.block_occupancy")
+        self._m_tok_s = reg.gauge("server.decode_tokens_per_s")
+        self._m_ttft = reg.histogram("server.ttft_s")
+        self._m_tpot = reg.histogram("server.tpot_s")
+        self._m_step = reg.histogram("server.decode_step_s")
+
+    def _feed_gauges(self):
+        """Occupancy from the allocator's free list + queue depth (host ints)."""
+        self._m_queue.set(len(self.queued))
+        if self.kv == "paged":
+            used = self.num_blocks - self.alloc.num_free
+            self._m_occupancy.set(used / self.num_blocks)
+        if self.decode_s > 0:
+            self._m_tok_s.set(self._m_decode_tokens.value / self.decode_s)
 
     # ----------------------------------------------------------- public API
     def submit(self, request: Request) -> Handle:
         """Queue a request; returns its Handle (possibly already rejected)."""
         h = Handle(len(self.handles), request)
+        h._t_submit = clock()
         self.handles.append(h)
         plen = int(len(request.prompt))
         worst = plen + request.max_new_tokens
@@ -135,6 +173,7 @@ class Server:
                 h.status, h.reason = "rejected", (
                     f"prompt length {plen} exceeds the largest prefill "
                     f"bucket {max(self.buckets)}")
+                self._m_rejected.inc()
                 return h
             if worst > self.max_seq_len or \
                     self.alloc.blocks_for(worst) > self.num_blocks:
@@ -142,6 +181,7 @@ class Server:
                     f"worst case {worst} tokens can never fit "
                     f"(max_seq_len={self.max_seq_len}, "
                     f"pool={self.num_blocks}x{self.block_size})")
+                self._m_rejected.inc()
                 return h
         else:
             if self._ring_shape is None:  # first request pins the geometry
@@ -151,14 +191,18 @@ class Server:
                     f"kv='ring' serves one uniform shape "
                     f"{self._ring_shape}, got {(plen, request.max_new_tokens)}"
                     " — use kv='paged' for ragged traffic")
+                self._m_rejected.inc()
                 return h
         self.queued.append(h)
+        self._m_admitted.inc()
+        self._m_queue.set(len(self.queued))
         return h
 
     def poll(self) -> List[Handle]:
         """Advance one tick (admit + one lockstep decode); returns handles
         that finished on this tick."""
         self._pump()
+        self._feed_gauges()
         if not any(self.active):
             return []
         try:
@@ -237,8 +281,9 @@ class Server:
             batch = {"tokens": jnp.asarray(prompt[None])}
             table_row = jnp.zeros((self.max_blocks,), jnp.int32)  # unused
         bucket = None if self.kv == "ring" else len(padded)
-        logits, cache1 = self._prefill_step(bucket)(
-            self.params, batch, self._next_key(slot))
+        with span("server.prefill", rid=h.rid, len=plen, bucket=bucket):
+            logits, cache1 = self._prefill_step(bucket)(
+                self.params, batch, self._next_key(slot))
         if self.cache is None:
             if self.kv == "paged":
                 self.cache = init_paged_cache(cache1, self.slots,
@@ -251,6 +296,8 @@ class Server:
                                     jnp.asarray(slot, jnp.int32))
         h._rng = np.random.default_rng(req.seed)
         h.tokens = [self._sample(h, np.asarray(logits[0]))]
+        h._t_first = clock()
+        self._m_ttft.observe(h._t_first - h._t_submit)
         h._next_pos = plen
         h.status, h.slot = "active", slot
         self.active[slot] = h
@@ -275,6 +322,9 @@ class Server:
 
     def _retire(self, h: Handle):
         h.status = "done"
+        if len(h.tokens) > 1:  # TPOT covers decode tokens only
+            self._m_tpot.observe(
+                (clock() - h._t_first) / (len(h.tokens) - 1))
         if self.kv == "paged":
             self.alloc.release(h.slot)
         self.active[h.slot] = None
@@ -288,28 +338,35 @@ class Server:
                     while self.alloc.blocks_for(h._next_pos + 1) > \
                             len(self.alloc.slot_blocks(i)):
                         self.alloc.append(i)
-        t0 = time.perf_counter()
-        if self.kv == "paged":
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(toks), self._next_key(),
-                jnp.asarray(self.alloc.table()))
-        else:
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(toks), self._next_key())
-        logits = np.asarray(logits)  # block on the step before timing it
-        dt = time.perf_counter() - t0
+        t0 = clock()
+        with span("server.decode", tick=self.decode_ticks):
+            if self.kv == "paged":
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(toks),
+                    self._next_key(), jnp.asarray(self.alloc.table()))
+            else:
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(toks),
+                    self._next_key())
+            logits = np.asarray(logits)  # block on the step before timing it
+        dt = clock() - t0
         self.decode_s += dt
+        self._m_step.observe(dt)
         self.engine.observe_step_time(dt)
         self.decode_ticks += 1
         finished = []
+        n_active = 0
         for i, h in enumerate(self.active):
             if h is None:
                 continue
+            n_active += 1
             h.tokens.append(self._sample(h, logits[i]))
             h._next_pos += 1
             if self._finished(h):
                 self._retire(h)
                 finished.append(h)
+        self._m_decode_tokens.inc(n_active)
+        self._feed_gauges()
         return finished
 
     # -------------------------------------------------------------- faults
@@ -328,4 +385,6 @@ class Server:
         self.cache = None
         self.queued = requeued + self.queued
         self.recoveries += 1
+        self._m_recoveries.inc()
+        self._feed_gauges()
         self.alloc.check()

@@ -11,7 +11,6 @@ sharding, compilation, and noise-key concerns live in
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +25,7 @@ from repro.optim.adamw import AdamWConfig, init_adamw
 from repro.models.model import init_params
 from repro.runtime.fault_tolerance import FaultTolerantLoop
 from repro.runtime.straggler import StragglerMonitor
+from repro.telemetry import clock
 
 
 def train(cfg, *, steps: int, global_batch: int, seq_len: int,
@@ -66,14 +66,14 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
         else:
             state = (params, opt_state)
             for s in range(steps):
-                t0 = time.time()
+                t0 = clock()
                 state = step_fn(state, stream.batch(s), s)
-                engine.observe_step_time(time.time() - t0)
+                engine.observe_step_time(clock() - t0)
                 if s % log_every == 0:
                     m = metrics_hist[-1]
                     print(f"step {s:5d} loss={m['loss']:.4f} "
                           f"ce={m['ce']:.4f} gnorm={m['grad_norm']:.2f} "
-                          f"({time.time()-t0:.2f}s)", flush=True)
+                          f"({clock()-t0:.2f}s)", flush=True)
     return state, metrics_hist
 
 

@@ -17,7 +17,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.fabric import FabricSpec
-from repro.core.legacy import legacy_fabric_spec, warn_deprecated_kwargs
 from repro.core.imc_linear import imc_linear_apply
 
 # ------------------------------------------------------------- sharding hints
@@ -202,31 +201,15 @@ def _take_fabric_key(spec):
     return k
 
 
-def dense(params, x, *, spec: Optional[FabricSpec] = None, key=None,
-          imc_mode: Optional[str] = None, imc_bits: Optional[int] = None,
-          use_kernel: Optional[bool] = None):
+def dense(params, x, *, spec: Optional[FabricSpec] = None, key=None):
     """Dense projection; routes through the IMC fabric when ``spec`` is given.
 
     This is the paper-technique integration point: every projection in the
     model zoo funnels through here, carrying ONE typed
     :class:`~repro.core.fabric.FabricSpec` instead of loose kwargs.  ``key``
     feeds the spec's noise model (required iff ``spec.noisy``; falls back to
-    the ambient :class:`fabric_noise_key` context).  The pre-spec
-    ``imc_mode``/``imc_bits``/``use_kernel`` kwargs are deprecated shims.
+    the ambient :class:`fabric_noise_key` context).
     """
-    if imc_mode is not None or imc_bits is not None or use_kernel is not None:
-        if spec is not None:
-            raise TypeError(
-                "pass either spec= or legacy imc_mode/imc_bits/use_kernel, "
-                "not both")
-        warn_deprecated_kwargs(
-            "dense", (k for k, v in dict(imc_mode=imc_mode, imc_bits=imc_bits,
-                                         use_kernel=use_kernel).items()
-                      if v is not None), stacklevel=3)
-        if imc_mode is not None and imc_mode != "off":
-            spec = legacy_fabric_spec(
-                mode=imc_mode, bits=imc_bits if imc_bits is not None else 8,
-                use_kernel=bool(use_kernel))
     if spec is not None:
         if spec.noisy and key is None:
             key = _take_fabric_key(spec)

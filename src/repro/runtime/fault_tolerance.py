@@ -5,19 +5,21 @@ Wraps any (state, batch) -> state step function with:
   * automatic resume from the latest committed step after a crash,
   * a failure-injection hook (used by tests and chaos drills) that raises at
     chosen steps to prove recovery restores bit-exact state and data cursor,
-  * straggler monitor integration (per-step wall-time feed).
+  * straggler monitor integration (per-step wall-time feed),
+  * telemetry: ``fault.failures`` / ``fault.resumes`` counters and a
+    ``fault.step_s`` histogram in the global registry.
 
 This is the single-controller view; at fleet scale each host runs the same
 loop and the checkpoint root lives on shared storage.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
 from repro.checkpoint.checkpoint import AsyncCheckpointer, latest_step, restore
 from repro.runtime.straggler import StragglerMonitor
+from repro.telemetry import clock, get_registry
 
 
 class InjectedFailure(RuntimeError):
@@ -43,25 +45,29 @@ class FaultTolerantLoop:
         if step is None:
             return init_state, 0
         state, step = restore(self.ckpt_root, init_state)
+        get_registry().counter("fault.resumes").inc()
         return state, step + 1  # checkpoint stores post-step state
 
     def run(self, init_state, n_steps: int,
             metrics_cb: Optional[Callable[[int, Dict], None]] = None):
         """Run to ``n_steps`` total; crashes are re-raised after a checkpoint
         flush so an external supervisor (or the test) can restart us."""
+        reg = get_registry()
         state, start = self.resume_or_init(init_state)
         for step in range(start, n_steps):
             if self.fail_at and step in self.fail_at \
                     and step not in self._failed_once:
                 self._failed_once.add(step)
                 self._ckpt.wait()
+                reg.counter("fault.failures").inc()
                 raise InjectedFailure(f"injected failure at step {step}")
-            t0 = time.perf_counter()
+            t0 = clock()
             batch = self.batch_fn(step)
             # the global step rides along so per-step noise keys (and hence
             # resumed runs) are independent of where the loop restarted
             state = self.step_fn(state, batch, step)
-            dt = time.perf_counter() - t0
+            dt = clock() - t0
+            reg.histogram("fault.step_s").observe(dt)
             self.monitor.record_step({0: dt})
             if (step + 1) % self.ckpt_every == 0 or step == n_steps - 1:
                 self._ckpt.save_async(step, state)

@@ -13,6 +13,24 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List
 
+from repro.telemetry import get_registry
+
+
+def _median(values: List[float]) -> float:
+    """True median: midpoint of the two central elements for even counts.
+
+    ``sorted(v)[len(v) // 2]`` (the old spelling) returns the *upper*-middle
+    element for even fleet sizes, inflating the median whenever the upper
+    half is slow — which raises the swap threshold exactly when stragglers
+    are present and lets them hide.
+    """
+    s = sorted(values)
+    n = len(s)
+    mid = n // 2
+    if n % 2:
+        return s[mid]
+    return 0.5 * (s[mid - 1] + s[mid])
+
 
 @dataclass
 class StragglerConfig:
@@ -36,10 +54,12 @@ class StragglerMonitor:
 
     def record_step(self, times: Dict[int, float]) -> List[int]:
         """Feed per-host wall times for one step; returns hosts to replace."""
+        reg = get_registry()
         for h, t in times.items():
             st = self.hosts.setdefault(h, HostStats(ewma_time=t))
             st.ewma_time = self.cfg.ewma * st.ewma_time + (1 - self.cfg.ewma) * t
-        med = sorted(s.ewma_time for s in self.hosts.values())[len(self.hosts) // 2]
+            reg.gauge(f"straggler.ewma_s.host{h}").set(st.ewma_time)
+        med = _median([s.ewma_time for s in self.hosts.values()])
         to_swap = []
         for h, st in self.hosts.items():
             if st.ewma_time > self.cfg.threshold * med:
@@ -49,6 +69,8 @@ class StragglerMonitor:
                     to_swap.append(h)
             else:
                 st.strikes = 0
+        if to_swap:
+            reg.counter("straggler.swaps").inc(len(to_swap))
         self.swaps.extend(to_swap)
         return to_swap
 

@@ -177,21 +177,6 @@ def test_fabric_matmul_sim_fused_kernel_matches_jnp_sim():
     np.testing.assert_allclose(np.asarray(ye), np.asarray(yk), rtol=1e-6)
 
 
-def test_legacy_noisy_use_kernel_falls_back_keyed():
-    # The OLD kwargs silently fell back to the keyed jnp path when
-    # use_kernel=True met noise; the deprecation shim preserves that mapping
-    # (the new spec API raises on noisy+pallas instead — see test_fabric).
-    rng = np.random.default_rng(81)
-    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
-    w = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
-    key = jax.random.key(5)
-    with pytest.warns(DeprecationWarning):
-        y1 = imc_matmul(x, w, bits=8, mode="sim", key=key, mismatch=True,
-                        use_kernel=True)
-        y2 = imc_matmul(x, w, bits=8, mode="sim", key=key, mismatch=True)
-    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
-
-
 def test_exact_mode_telescopes_to_int_matmul_quantized():
     # The full quantize -> offset-binary -> pyramid pipeline in exact mode
     # equals the plain int8 matmul on the quantized operands.

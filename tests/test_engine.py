@@ -14,7 +14,7 @@ from repro.core.fabric import FabricSpec, NoiseSpec
 from repro.launch.compat import ambient_mesh, mesh_context
 from repro.launch.engine import Engine
 from repro.launch.mesh import make_test_mesh
-from repro.launch.serve import BatchedServer, Request
+from repro.launch.server import Request, Server
 from repro.models.model import decode_step, init_params, prefill
 from repro.optim.adamw import AdamWConfig, init_adamw
 from repro.runtime.straggler import StragglerMonitor
@@ -35,9 +35,15 @@ def params(cfg):
 
 def _requests(cfg, n, seed=0):
     rng = np.random.default_rng(seed)
-    return [Request(i, rng.integers(0, cfg.vocab_size,
-                                    size=PROMPT).astype(np.int32), MAX_NEW)
-            for i in range(n)]
+    return [Request(rng.integers(0, cfg.vocab_size,
+                                 size=PROMPT).astype(np.int32),
+                    max_new_tokens=MAX_NEW)
+            for _ in range(n)]
+
+
+def _ring_server(cfg, params, eng, **kw):
+    """Fixed-ring serving geometry (the pre-paging shape) behind Server."""
+    return Server(cfg, params, engine=eng, slots=2, kv="ring", **kw)
 
 
 # ----------------------------------------------------------- compat shim
@@ -107,41 +113,45 @@ def test_batched_serve_matches_sequential_decode(cfg, params):
     reqs = _requests(cfg, 5)
     eng = Engine()
     with eng.activate():
-        server = BatchedServer(cfg, params, slots=2, prompt_len=PROMPT,
-                               max_new=MAX_NEW, engine=eng)
-        done, _ = server.run(reqs)
-    for r in done:
-        assert r.out == _sequential_decode(cfg, params, r), \
-            f"req{r.rid}: batched stream diverged from sequential decode"
+        server = _ring_server(cfg, params, eng)
+        handles = [server.submit(r) for r in reqs]
+        server.drain()
+    for h in handles:
+        assert h.tokens == _sequential_decode(cfg, params, h.request), \
+            f"req{h.rid}: batched stream diverged from sequential decode"
 
 
 def test_serve_steady_state_no_recompiles(cfg, params):
     eng = Engine()
     with eng.activate():
-        server = BatchedServer(cfg, params, slots=2, prompt_len=PROMPT,
-                               max_new=MAX_NEW, engine=eng)
-        server._admit(_requests(cfg, 1)[0], 0)
-        server.step()
-        warm = eng.stats.traces  # one prefill + one decode trace
-        done, _ = server.run(_requests(cfg, 4, seed=1))
-    assert all(len(r.out) == MAX_NEW for r in done)
-    assert eng.stats.traces == warm == 2, \
+        server = _ring_server(cfg, params, eng)
+        server.submit(_requests(cfg, 1)[0])
+        server.drain()  # warm every executable (prefill/admit/decode)
+        warm = eng.stats.traces
+        for r in _requests(cfg, 4, seed=1):
+            server.submit(r)
+        handles = server.drain()
+    assert all(len(h.tokens) == MAX_NEW for h in handles)
+    assert eng.stats.traces == warm, \
         "admit/retire slot surgery must not retrace the compiled steps"
-    assert eng.stats.compiles == 2
+    assert eng.stats.compiles == warm, \
+        "steady state reuses the warm-up executables (no new compiles)"
 
 
 def test_serve_fault_injection_recovers_identical_streams(cfg, params):
     eng = Engine()
     with eng.activate():
-        server = BatchedServer(cfg, params, slots=2, prompt_len=PROMPT,
-                               max_new=MAX_NEW, engine=eng)
-        baseline, _ = server.run(_requests(cfg, 3))
-        crashed = BatchedServer(cfg, params, slots=2, prompt_len=PROMPT,
-                                max_new=MAX_NEW, engine=eng)
-        recovered, _ = crashed.run(_requests(cfg, 3), fail_at={1})
+        server = _ring_server(cfg, params, eng)
+        for r in _requests(cfg, 3):
+            server.submit(r)
+        baseline = server.drain()
+        crashed = _ring_server(cfg, params, eng, fail_at=(1,))
+        for r in _requests(cfg, 3):
+            crashed.submit(r)
+        recovered = crashed.drain()
     assert crashed.recoveries == 1
     for b, r in zip(baseline, recovered):
-        assert b.out == r.out, \
+        assert b.tokens == r.tokens, \
             f"req{b.rid}: stream changed across injected failure"
 
 

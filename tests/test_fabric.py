@@ -3,12 +3,11 @@
 Covers spec validation + hashability, backend-registry dispatch (with early
 raises on unsupported combos), the four facade verbs (matmul/linear/logic/
 cost), NoiseSpec end-to-end through a model forward, PRNG key threading down
-to the bit-serial engine, asymmetric precision parity, the deprecation shims
-(old kwargs warn AND produce identical results), and jit-cache stability of
+to the bit-serial engine, asymmetric precision parity, the removed pre-spec
+kwargs (legacy spellings now raise ``TypeError``), and jit-cache stability of
 equal specs.
 """
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +17,7 @@ import pytest
 import repro.core.constants as C
 from repro.core.bitserial import bitserial_matmul_unsigned
 from repro.core.fabric import (Fabric, FabricSpec, NoiseSpec, fabric_matmul,
-                               legacy_fabric_spec, resolve_engine)
+                               resolve_engine)
 from repro.core.imc_linear import apply_imc_linear, imc_linear_apply, init_imc_linear
 from repro.core.imc_matmul import imc_matmul
 from repro.core.quant import quantize, signed_product_correction, to_offset_binary
@@ -288,61 +287,44 @@ def test_config_fabric_channels_behave_under_replace():
                                imc_mode="off").imc_fabric == spec
 
 
-# ----------------------------------------------------------- deprecation
-def test_imc_matmul_legacy_kwargs_warn_and_match():
-    x, w = _xw(seed=8)
-    key = jax.random.key(0)
-    with pytest.warns(DeprecationWarning, match="FabricSpec"):
-        old = imc_matmul(x, w, bits=8, mode="sim", mismatch=True, key=key)
-    new = fabric_matmul(x, w, FabricSpec(
-        mode="sim", backend="jnp",
-        noise=NoiseSpec(mismatch_sigma=C.MC_SIGMA_VK)), key=key)
-    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
-
-
-def test_dense_legacy_kwargs_warn_and_match():
+# ------------------------------------------------- legacy kwargs removed
+def test_legacy_kwargs_are_gone():
+    """The pre-spec loose kwargs finished deprecation: they now raise
+    TypeError like any unknown keyword, and the spec path is the only one."""
     from repro.models.common import dense, init_dense
 
+    x, w = _xw(seed=8)
+    with pytest.raises(TypeError):
+        imc_matmul(x, w, bits=8, mode="sim", mismatch=True)
+    with pytest.raises(TypeError):
+        imc_matmul(x, w, use_kernel=True)
     p = init_dense(jax.random.key(0), 16, 8)
-    x = jax.random.normal(jax.random.key(1), (4, 16))
-    with pytest.warns(DeprecationWarning, match="FabricSpec"):
-        old = dense(p, x, imc_mode="exact", imc_bits=8)
-    new = dense(p, x, spec=FabricSpec(backend="jnp"))
-    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
-    with pytest.warns(DeprecationWarning):
-        off = dense(p, x, imc_mode="off")  # legacy "off" stays float path
-    np.testing.assert_array_equal(np.asarray(off), np.asarray(dense(p, x)))
+    xa = jax.random.normal(jax.random.key(1), (4, 16))
+    with pytest.raises(TypeError):
+        dense(p, xa, imc_mode="exact", imc_bits=8)
+    lp = init_imc_linear(jax.random.key(0), 16, 8, use_bias=True)
+    with pytest.raises(TypeError):  # old positional tail (bits, mode, kernel)
+        imc_linear_apply(xa, lp["w"], lp["b"], 8, "sim", False)
+    with pytest.raises(TypeError):
+        apply_imc_linear(lp, xa, bits=4, mode="sim")
+    with pytest.raises(ImportError):
+        from repro.core.legacy import legacy_fabric_spec  # noqa: F401
 
 
-def test_imc_linear_legacy_positional_tail_warns_and_matches():
-    p = init_imc_linear(jax.random.key(0), 16, 8, use_bias=True)
-    x = jax.random.normal(jax.random.key(1), (4, 16))
-    with pytest.warns(DeprecationWarning, match="FabricSpec"):
-        old = imc_linear_apply(x, p["w"], p["b"], 8, "sim", False)
-    new = imc_linear_apply(x, p["w"], p["b"],
-                           spec=FabricSpec(mode="sim", backend="jnp"))
-    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
-    with pytest.warns(DeprecationWarning, match="FabricSpec"):
-        old_kw = apply_imc_linear(p, x, bits=4, mode="sim")
-    new_kw = apply_imc_linear(
-        p, x, spec=FabricSpec(bits_a=4, bits_w=4, mode="sim", backend="jnp"))
-    np.testing.assert_array_equal(np.asarray(old_kw), np.asarray(new_kw))
-
-
-def test_mixing_spec_and_legacy_kwargs_raises():
+def test_spec_path_serves_former_legacy_shapes():
+    """Every mapping the shims used to provide is a one-line FabricSpec."""
     x, w = _xw(seed=9)
-    with pytest.raises(TypeError, match="not both"):
-        imc_matmul(x, w, FabricSpec(), bits=8)
-    from repro.models.common import dense
-    with pytest.raises(TypeError, match="not both"):
-        dense({"w": w}, x, spec=FabricSpec(), imc_mode="exact")
-
-
-def test_legacy_spec_mapping_preserves_noisy_kernel_fallback():
-    spec = legacy_fabric_spec(mode="sim", use_kernel=True, mismatch=True)
-    assert spec.resolve_backend() == "jnp" and spec.noisy  # old silent path
-    spec2 = legacy_fabric_spec(mode="sim", use_kernel=True)
-    assert spec2.resolve_backend() == "pallas"
+    key = jax.random.key(0)
+    noisy = FabricSpec(mode="sim", backend="jnp",
+                       noise=NoiseSpec(mismatch_sigma=C.MC_SIGMA_VK))
+    y = fabric_matmul(x, w, noisy, key=key)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(imc_matmul(x, w, noisy, key=key)))
+    # the old use_kernel=True + noise combination silently fell back to jnp;
+    # the typed spec makes that explicit (pallas + noise raises at validation)
+    assert noisy.resolve_backend() == "jnp" and noisy.noisy
+    assert FabricSpec(mode="sim", backend="pallas").resolve_backend() == \
+        "pallas"
 
 
 # -------------------------------------------------------------- jit cache

@@ -1,0 +1,237 @@
+"""Telemetry subsystem tests.
+
+Registry mechanics (histogram percentile accuracy, disabled-mode no-ops and
+their cost), span recording + Chrome trace export, snapshot/markdown/bench
+exporters, the straggler monitor's true-median regression, and the serving
+SLO integration: TTFT/TPOT/occupancy recorded on the mixed-length ragged
+schedule WITHOUT breaking the zero-steady-state-retrace guarantee.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.launch.engine import Engine
+from repro.launch.server import Request, Server
+from repro.models.model import init_params
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor, _median
+from repro.telemetry import (Registry, SpanRecorder, clock, get_registry,
+                             merge_into_bench, serving_slos, snapshot,
+                             to_markdown)
+
+LENGTHS = (7, 16, 33, 12, 5)  # same ragged schedule the paged-KV tests pin
+MAX_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduce_config(get_config("qwen2.5-3b"))
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(jax.random.key(0), cfg)
+
+
+# ---------------------------------------------------------------- registry
+def test_histogram_percentiles_track_known_distribution():
+    reg = Registry()
+    h = reg.histogram("t")
+    vals = np.arange(1, 1001) / 1000.0  # uniform 1 ms .. 1 s
+    for v in vals:
+        h.observe(float(v))
+    assert h.count == 1000 and h.min == 0.001 and h.max == 1.0
+    for q, true in ((50, 0.5), (95, 0.95), (99, 0.99)):
+        est = h.percentile(q)
+        assert abs(est - true) / true < 0.15, \
+            f"p{q}: {est} vs true {true} (log-bucket error bound exceeded)"
+    s = h.summary()
+    assert s["count"] == 1000 and abs(s["mean"] - vals.mean()) < 1e-9
+
+
+def test_histogram_single_sample_is_exact_and_outliers_clamp():
+    reg = Registry()
+    h = reg.histogram("t")
+    h.observe(0.0123)
+    # min/max clamping makes the covering bucket degenerate -> exact
+    assert h.percentile(50) == pytest.approx(0.0123)
+    h2 = reg.histogram("wild")
+    h2.observe(1e-9)  # below lo
+    h2.observe(1e6)  # above hi
+    assert h2.count == 2 and h2.min == 1e-9 and h2.max == 1e6
+    assert reg.histogram("empty").percentile(50) is None
+
+
+def test_registry_names_are_typed_and_stable():
+    reg = Registry()
+    c = reg.counter("x")
+    c.inc(3)
+    assert reg.counter("x") is c and c.value == 3
+    g = reg.gauge("depth")
+    g.set(2.0)
+    g.set(1.0)
+    assert g.value == 1.0 and g.hwm == 2.0
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("x")
+    snap = reg.snapshot()
+    assert snap["counters"]["x"] == 3
+    assert snap["gauges"]["depth"] == {"value": 1.0, "hwm": 2.0}
+
+
+def test_disabled_mode_records_nothing():
+    reg = Registry()
+    c, g, h = reg.counter("c"), reg.gauge("g"), reg.histogram("h")
+    c.inc()
+    h.observe(0.5)
+    with reg.disabled():
+        c.inc(100)
+        g.set(9.0)
+        h.observe(0.5)
+        with SpanRecorder(reg).span("quiet"):
+            pass
+    assert reg.enabled  # context restores the flag
+    assert c.value == 1 and g.value == 0.0 and h.count == 1
+    off = Registry(enabled=False)
+    off.counter("n").inc()
+    assert off.counter("n").value == 0
+
+
+def test_reset_zeroes_in_place_without_orphaning_handles():
+    """Components cache metric handles at construction; reset() must zero
+    them, not replace them (or post-reset records vanish from snapshots)."""
+    reg = Registry()
+    c, h = reg.counter("c"), reg.histogram("h")
+    c.inc(5)
+    h.observe(0.5)
+    reg.reset()
+    assert reg.counter("c") is c and c.value == 0
+    assert h.count == 0 and h.percentile(50) is None
+    c.inc()
+    h.observe(0.25)  # the cached handles still feed the snapshot
+    snap = reg.snapshot()
+    assert snap["counters"]["c"] == 1
+    assert snap["histograms"]["h"]["count"] == 1
+
+
+def test_disabled_record_path_is_cheap_enough_for_decode_loops():
+    """Acceptance bound: per-record cost with telemetry off stays under 2%
+    of a (very fast) 1 ms decode step."""
+    reg = Registry(enabled=False)
+    h, c = reg.histogram("h"), reg.counter("c")
+    n = 100_000
+    t0 = clock()
+    for _ in range(n):
+        h.observe(1e-3)
+        c.inc()
+    per_record = (clock() - t0) / (2 * n)
+    assert per_record < 0.02 * 1e-3, \
+        f"disabled record path costs {per_record * 1e9:.0f} ns"
+
+
+# ------------------------------------------------------------------- spans
+def test_spans_nest_and_export_chrome_trace(tmp_path):
+    reg = Registry()
+    rec = SpanRecorder(reg)
+    with rec.span("outer", phase="a"):
+        with rec.span("inner"):
+            pass
+    assert [e["name"] for e in rec.events] == ["inner", "outer"]
+    trace = rec.chrome_trace()
+    # chronological order + the complete-event shape Perfetto expects
+    assert [e["name"] for e in trace["traceEvents"]] == ["outer", "inner"]
+    outer, inner = trace["traceEvents"]
+    assert outer["ph"] == "X" and outer["args"] == {"phase": "a"}
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    path = rec.export(str(tmp_path / "trace.json"))
+    loaded = json.load(open(path))
+    assert loaded["traceEvents"] and loaded["displayTimeUnit"] == "ms"
+
+
+# --------------------------------------------------------------- exporters
+def test_markdown_and_bench_merge_round_trip():
+    reg = Registry()
+    reg.counter("server.admitted").inc(4)
+    reg.gauge("server.queue_depth").set(2)
+    reg.histogram("server.ttft_s").observe(0.05)
+    md = to_markdown(registry=reg)
+    assert "server.admitted" in md and "server.ttft_s" in md
+    rec = merge_into_bench({"tokens_per_s": 10.0}, reg)
+    assert rec["telemetry"]["counters"]["server.admitted"] == 4
+    json.dumps(rec)  # BENCH_imc.json-serializable as-is
+
+
+def test_serving_slos_are_none_without_a_server():
+    slos = serving_slos(Registry())
+    assert slos == {"ttft_ms": None, "tpot_ms": None, "occupancy_peak": None}
+
+
+# ------------------------------------------------- straggler true median
+def test_straggler_median_is_true_median():
+    assert _median([0.1, 0.4]) == pytest.approx(0.25)
+    assert _median([0.1, 0.1, 0.2, 0.3]) == pytest.approx(0.15)
+    assert _median([0.3, 0.1, 0.2]) == 0.2
+
+
+@pytest.mark.parametrize("times,slow", [
+    ({0: 0.1, 1: 0.4}, 1),  # 2 hosts: upper-middle "median" (0.4) hides it
+    ({0: 0.1, 1: 0.1, 2: 0.2, 3: 0.3}, 3),  # 4 hosts: 0.2 vs true 0.15
+])
+def test_straggler_flags_slow_host_in_even_fleets(times, slow):
+    """Regression: with the old upper-middle median the threshold lands at
+    or above the straggler's own EWMA and it is never flagged."""
+    mon = StragglerMonitor(cfg=StragglerConfig(threshold=1.5, patience=3))
+    for _ in range(mon.cfg.patience + 2):
+        flagged = mon.record_step(dict(times))
+    assert mon.swaps == [slow] and flagged == []
+    old_median = sorted(times.values())[len(times) // 2]
+    assert times[slow] <= mon.cfg.threshold * old_median, \
+        "test vector no longer distinguishes true median from upper-middle"
+
+
+# ------------------------------------------- serving SLOs, end to end
+def test_server_slos_on_ragged_schedule_without_retraces(cfg, params):
+    reg = Registry()
+    eng = Engine(registry=reg)
+    assert reg.enabled
+    with eng.activate():
+        server = Server(cfg, params, engine=eng, slots=2, block_size=8,
+                        buckets=(16, 48), max_seq_len=48 + MAX_NEW)
+        prompts = [np.random.default_rng(0).integers(
+            0, cfg.vocab_size, size=n).astype(np.int32) for n in LENGTHS]
+        for p in prompts:
+            server.submit(Request(p, max_new_tokens=MAX_NEW))
+        server.drain()
+        warm = eng.stats.traces
+        for p in reversed(prompts):
+            server.submit(Request(p, max_new_tokens=MAX_NEW))
+        handles = server.drain()
+    assert all(h.done for h in handles)
+    # telemetry-on steady state stays data-only (the hard constraint)
+    assert eng.stats.traces == warm, \
+        "telemetry recording must not retrace the compiled steps"
+
+    n = 2 * len(LENGTHS)
+    snap = snapshot(reg)
+    assert snap["counters"]["server.admitted"] == n
+    assert snap["histograms"]["server.ttft_s"]["count"] == n
+    assert snap["histograms"]["server.tpot_s"]["count"] == n
+    occ = snap["gauges"]["server.block_occupancy"]
+    assert 0.0 < occ["hwm"] <= 1.0
+    assert occ["value"] == 0.0, "drained pool must read empty"
+    assert snap["counters"]["server.decode_tokens"] == n * (MAX_NEW - 1)
+    assert snap["gauges"]["server.decode_tokens_per_s"]["value"] > 0
+
+    slos = serving_slos(reg)
+    assert slos["ttft_ms"] > 0 and slos["tpot_ms"] > 0
+    assert slos["occupancy_peak"] == round(occ["hwm"], 3)
+    # engine-side instrumentation rode along on the same registry
+    assert snap["counters"]["engine.compiles"] >= 3
+    assert snap["histograms"]["engine.step_s.decode"]["count"] > 0
+
+
+def test_global_registry_is_the_default_feed():
+    eng = Engine()
+    assert eng.registry is get_registry()
