@@ -9,11 +9,17 @@ under experiments/dryrun/.
 ``--json [PATH]`` additionally runs the Engine-backed continuous-batching
 serve bench per (FabricSpec x KV geometry) — float / exact / sim / noisy-sim,
 each under the legacy fixed ring AND the paged block pool, plus one
-ragged-admission paged row — and writes rows (tokens/s, steady-state
-decode-step ms) to ``PATH`` (default ``BENCH_imc.json``).
+ragged-admission paged row and paged-kernel (``attn_impl='pallas'``) siblings
+of the float paged rows — and writes rows (tokens/s, steady-state
+decode-step ms, attn_impl tag) to ``PATH`` (default ``BENCH_imc.json``).
 
 ``--compare OLD NEW`` diffs two such JSON files (tokens/s, step ms, % delta)
-as a markdown table — CI posts this against the previous main artifact.
+as a markdown table keyed by (spec, kv, mix, attn_impl) — jnp-path numbers
+are never diffed against kernel-path numbers — and CI posts it against the
+previous main artifact.
+
+The CSV path includes ``paged_decode_attn/*`` rows (bench_decode_attn): the
+decode-attention op swept over context length, one row per attn_impl.
 """
 from __future__ import annotations
 
@@ -28,13 +34,17 @@ def _rows_from(fn, smoke: bool):
     return fn()
 
 
-def _serve_once(cfg, params, lengths, max_new, kv):
+def _serve_once(cfg, params, lengths, max_new, kv, attn_impl=None):
     """One Server run: warmup wave (compiles) + timed wave; returns a row.
 
     Each run gets its OWN telemetry Registry (no cross-row contamination),
     and the row carries the serving SLO trio (TTFT/TPOT/occupancy peak) plus
-    the full telemetry snapshot for BENCH_imc.json.
+    the full telemetry snapshot for BENCH_imc.json.  Every row is tagged
+    with the decode-attention engine that produced it (``attn_impl``), and
+    paged-kernel rows run off-TPU carry ``interpret: true`` — interpreter
+    throughput is an oracle-mode number, not perf.
     """
+    import jax
     import numpy as np
 
     from repro.launch.engine import Engine
@@ -50,7 +60,7 @@ def _serve_once(cfg, params, lengths, max_new, kv):
     engine = Engine(monitor=StragglerMonitor(), registry=registry)
     with engine.activate():
         server = Server(cfg, params, engine=engine, slots=4, kv=kv,
-                        block_size=8, buckets=buckets,
+                        block_size=8, buckets=buckets, attn_impl=attn_impl,
                         max_seq_len=max(buckets) + max_new)
         for p in prompts:  # warmup wave: traces + compiles land here
             server.submit(Request(p, max_new_tokens=max_new))
@@ -72,15 +82,18 @@ def _serve_once(cfg, params, lengths, max_new, kv):
     # Server.decode_s.
     tokens = sum(len(h.tokens) - 1 for h in timed)
     host = engine.monitor.hosts.get(0)
-    return {
+    row = {
         "tokens_per_s": round(tokens / decode_dt, 2),
         "e2e_tokens_per_s": round(sum(len(h.tokens) for h in timed) / dt, 2),
         "step_ms": round(host.ewma_time * 1e3, 3) if host else None,
         "compiled_steps": engine.stats.compiles,
         "traces": engine.stats.traces,
-        **serving_slos(registry),
+        **serving_slos(registry, attn_impl=server.attn_impl),
         "telemetry": snapshot(registry),
     }
+    if server.attn_impl == "pallas" and jax.default_backend() != "tpu":
+        row["interpret"] = True  # CPU interpreter row: exempt from perf bars
+    return row
 
 
 def serve_spec_rows(smoke: bool = True):
@@ -90,6 +103,12 @@ def serve_spec_rows(smoke: bool = True):
     and ``kv='paged'`` at one uniform prompt length — the paged row must not
     regress tokens/s vs its ring sibling.  One extra ragged-mix paged row
     (prompt lengths 7/16/33) covers the admission path ring cannot serve.
+
+    The float spec additionally runs its paged rows (uniform + ragged) with
+    ``attn_impl='pallas'`` — the fused flash-decode kernel vs the jnp gather
+    path on identical traffic.  On TPU the kernel row must meet or beat its
+    jnp sibling at long contexts; on CPU it is an interpreter-correctness
+    row (tagged ``interpret: true``).
     """
     import dataclasses
 
@@ -111,27 +130,42 @@ def serve_spec_rows(smoke: bool = True):
     uniform = [16] * n_req
     ragged = [(7, 16, 33)[i % 3] for i in range(n_req)]
     params = init_params(jax.random.key(0), cfg0)
-    matrix = [(label, spec, kv, mix, lens)
+    matrix = [(label, spec, kv, mix, lens, None)
               for label, spec in specs
               for kv, mix, lens in (("ring", "uniform", uniform),
                                     ("paged", "uniform", uniform))]
-    matrix.append(("float", None, "paged", "ragged", ragged))
+    matrix.append(("float", None, "paged", "ragged", ragged, None))
+    # paged-kernel siblings of the float paged rows: same traffic, fused
+    # flash-decode attention instead of the dense gather
+    matrix.append(("float", None, "paged", "uniform", uniform, "pallas"))
+    matrix.append(("float", None, "paged", "ragged", ragged, "pallas"))
     rows = []
-    for label, spec, kv, mix, lens in matrix:
+    for label, spec, kv, mix, lens, attn_impl in matrix:
         cfg = dataclasses.replace(cfg0, fabric=spec, imc_mode="off")
-        row = _serve_once(cfg, params, lens, max_new, kv)
+        row = _serve_once(cfg, params, lens, max_new, kv,
+                         attn_impl=attn_impl)
         rows.append({"spec": label or spec.label, "kv": kv, "mix": mix,
                      "arch": cfg0.name, **row})
     return rows
 
 
 def compare(old_path: str, new_path: str) -> None:
-    """Diff two BENCH_imc.json runs row-by-row (markdown table to stdout)."""
+    """Diff two BENCH_imc.json runs row-by-row (markdown table to stdout).
+
+    Rows are keyed by (spec, kv, mix, attn_impl) — a jnp-path row is never
+    diffed against a kernel-path row.  Files predating the ``attn_impl`` tag
+    default to the engine they actually ran: ``ring`` geometry, or the jnp
+    gather path for paged rows.
+    """
+    def impl_of(r):
+        kv = r.get("kv", "ring")
+        return r.get("attn_impl", "ring" if kv == "ring" else "jnp")
+
     def load(p):
         with open(p) as f:
             rec = json.load(f)
-        return {(r["spec"], r.get("kv", "ring"), r.get("mix", "uniform")): r
-                for r in rec["rows"]}
+        return {(r["spec"], r.get("kv", "ring"), r.get("mix", "uniform"),
+                 impl_of(r)): r for r in rec["rows"]}
 
     def pct(old, new):
         if not old or old in (None, 0) or new is None:
@@ -139,13 +173,16 @@ def compare(old_path: str, new_path: str) -> None:
         return f"{100.0 * (new - old) / old:+.1f}%"
 
     old, new = load(old_path), load(new_path)
-    print("| spec | kv | mix | tok/s old | tok/s new | Δ | "
+    print("| spec | kv | mix | attn | tok/s old | tok/s new | Δ | "
           "step ms old | step ms new | Δ | ttft ms old | ttft ms new | Δ | "
           "tpot ms old | tpot ms new | Δ |")
-    print("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
+          "---|")
     for key in sorted(set(old) | set(new)):
         o, n = old.get(key, {}), new.get(key, {})
-        cells = [key[0], key[1], key[2]]
+        attn = key[3] + (" (interpret)" if (o.get("interpret")
+                                            or n.get("interpret")) else "")
+        cells = [key[0], key[1], key[2], attn]
         for field in ("tokens_per_s", "step_ms", "ttft_ms", "tpot_ms"):
             ov, nv = o.get(field), n.get(field)
             cells += [ov if ov is not None else "—",
@@ -172,11 +209,13 @@ def main(argv=None) -> None:
         compare(*args.compare)
         return
 
-    from benchmarks import bench_imc_throughput, bench_paper_tables, roofline
+    from benchmarks import (bench_decode_attn, bench_imc_throughput,
+                            bench_paper_tables, roofline)
 
     lines = ["name,us_per_call,derived"]
     print(lines[0])
-    for fn in (*bench_paper_tables.ALL, *bench_imc_throughput.ALL):
+    for fn in (*bench_paper_tables.ALL, *bench_imc_throughput.ALL,
+               *bench_decode_attn.ALL):
         for r in _rows_from(fn, args.smoke):
             lines.append(r)
             print(r, flush=True)
@@ -193,8 +232,8 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(rec, f, indent=1)
         for r in rows:
-            print(f"serve/{r['spec']}/{r['kv']}/{r['mix']},{r['step_ms']},"
-                  f"{r['tokens_per_s']} tok/s", flush=True)
+            print(f"serve/{r['spec']}/{r['kv']}/{r['mix']}/{r['attn_impl']},"
+                  f"{r['step_ms']},{r['tokens_per_s']} tok/s", flush=True)
 
 
 if __name__ == "__main__":

@@ -43,6 +43,9 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=10)
     ap.add_argument("--kv", default="paged", choices=["paged", "ring"])
+    ap.add_argument("--attn-impl", default=None, choices=["jnp", "pallas"],
+                    help="paged-decode attention engine (default: pallas on "
+                         "TPU, jnp elsewhere; pallas runs interpreted on CPU)")
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -66,7 +69,7 @@ def main():
     with engine.activate():
         server = Server(cfg, params, engine=engine, slots=args.slots,
                         kv=args.kv, block_size=args.block_size,
-                        buckets=buckets,
+                        buckets=buckets, attn_impl=args.attn_impl,
                         max_seq_len=max(buckets) + args.max_new)
         warm_traces = None
         total_tokens, t0 = 0, time.perf_counter()
@@ -92,11 +95,12 @@ def main():
         print(f"req{h.rid} (len={len(h.request.prompt)}): "
               f"generated {h.tokens}")
     print(f"{len(server.handles)} requests ({args.waves} waves, lengths "
-          f"{lengths}) through {args.slots} slots [{args.kv}]; "
+          f"{lengths}) through {args.slots} slots "
+          f"[{args.kv}, attn={server.attn_impl}]; "
           f"{total_tokens / dt:.1f} tok/s end-to-end; "
           f"{engine.stats.compiles} compiled steps, {engine.stats.traces} "
           f"traces, waves 2+ trace-free")
-    slos = serving_slos(engine.registry)
+    slos = serving_slos(engine.registry, attn_impl=server.attn_impl)
     print(f"SLOs: ttft p50 {slos['ttft_ms']} ms, tpot p50 {slos['tpot_ms']} "
           f"ms, peak block occupancy {slos['occupancy_peak']}")
     if args.telemetry:

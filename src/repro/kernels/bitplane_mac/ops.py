@@ -17,10 +17,7 @@ from repro.core import constants as C
 from repro.core.decoder import thresholds as core_thresholds
 from repro.core.quant import to_bitplanes
 from repro.kernels.bitplane_mac.bitplane_mac import bitplane_mac_raw
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.compat import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("bits_a", "bits_w", "rows",
@@ -35,7 +32,7 @@ def bitplane_mac(u_a, u_w, thr=None, *, bits_a: int = 8, bits_w: int = 8,
     comparator references for ``rows`` (re-tunable, paper §IV-C).
     Returns int32[..., N] == u_a @ u_w (noise-free decode is exact).
     """
-    interpret = _default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     if thr is None:
         thr = core_thresholds(rows, mode="physics")
     batch = u_a.shape[:-1]

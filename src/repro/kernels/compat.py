@@ -12,11 +12,19 @@ Resolved at import time (cheap, and failures surface immediately):
   * :func:`compiler_params` — build a params object from keyword arguments,
     dropping kwargs the installed class does not know about (forward/backward
     tolerant).
+
+Plus the interpret-mode policy every kernel wrapper shares:
+
+  * :func:`default_interpret` / :func:`resolve_interpret` — off-TPU backends
+    run ``pallas_call(interpret=True)``, which is how CPU CI exercises every
+    kernel (flash_attn, paged_attn, bitplane_mac) on each PR instead of only
+    on TPU hardware.
 """
 from __future__ import annotations
 
 import inspect
 
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 # jax >= 0.7 exposes ``CompilerParams``; 0.4.x-0.6.x call it
@@ -40,3 +48,15 @@ def compiler_params(**kw):
     installed jax supports takes effect.
     """
     return CompilerParams(**{k: v for k, v in kw.items() if k in _ACCEPTED})
+
+
+def default_interpret() -> bool:
+    """True off-TPU: Mosaic only targets TPU, so every other backend runs the
+    kernels through the Pallas interpreter (bit-faithful, portable CI)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """The ``interpret=None`` convention shared by all kernel ``ops`` wrappers:
+    ``None`` defers to :func:`default_interpret`, an explicit bool wins."""
+    return default_interpret() if interpret is None else interpret

@@ -1,0 +1,164 @@
+"""Pallas TPU kernel: paged flash-decode attention over per-slot block tables.
+
+The serving hot loop's §Perf finding this addresses: the jnp paged-decode path
+gathers every slot's **full logical span** (``MB * block_size`` rows) out of
+the shared pools into a dense ``(B, T_ctx, KV, hd)`` HBM tensor — upcast to
+f32 again for int8 pools — before a dense SDPA, so per-token HBM traffic
+scales with the *allocated* span regardless of how many blocks are live.
+Here attention reads the pools **directly** through the block table: the
+gathered K/V never exists in HBM, int8 blocks dequantize in-register, and
+sentinel (unallocated) table entries are skipped outright.
+
+Grid: ``(B, KV, MB)`` — slot x kv-head x table-block, the block axis
+innermost ("arbitrary", carries the online-softmax state).  The block table
+and per-slot positions ride in via **scalar prefetch**
+(:class:`pltpu.PrefetchScalarGridSpec`), so each step's BlockSpec index map
+resolves ``table[b, j]`` *before* the body runs and DMAs exactly one
+``(block_size, hd)`` K and V panel from the pool into VMEM.
+
+Per ``(b, h)`` the scratch carries flash-decode state across ``j`` blocks
+(the m/l/acc pattern of ``kernels/flash_attn``):
+
+    s      = q_g k_j^T * scale        (rep x bs, MXU)
+    m'     = max(m, rowmax(s))        (masked: ctx <= pos, sliding window)
+    alpha  = exp(m - m')
+    p      = where(valid, exp(s - m'), 0)
+    l      = alpha*l + rowsum(p)
+    acc    = alpha*acc + p v_j
+    out    = acc / l                  (flushed at the last block)
+
+GQA runs **grouped**: q arrives as ``(B, KV, rep, hd)`` (head ``h`` =
+``kvh * rep + r``, the `_sdpa` layout), so K/V are never repeated — each
+kv-head's ``rep`` query rows share one pool panel.  Blocks whose table entry
+is ``-1`` (never allocated) or entirely outside the ``ctx <= pos`` /
+sliding-window span are skipped with :func:`pl.when`; their DMA index clamps
+to block 0 and the loaded panel is ignored.
+
+Fully-masked slots (inactive: empty table, ``pos == 0``) flush ``acc/l = 0``
+— their logits are never consumed by the server.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import compiler_params
+
+NEG_INF = -1e30
+
+
+def _make_kernel(bs: int, rep: int, scale: float, window: int, int8: bool):
+    def kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, *rest):
+        if int8:
+            ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        else:
+            o_ref, m_ref, l_ref, acc_ref = rest
+        b = pl.program_id(0)
+        j = pl.program_id(2)
+
+        @pl.when(j == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        pos = pos_ref[b]
+        entry = tbl_ref[b, j]
+        base = j * bs
+        # A block contributes iff it is allocated (no -1 sentinel) and its
+        # span [base, base+bs) intersects the valid context (<= pos, and
+        # inside the sliding window when one is set).
+        live = (entry >= 0) & (base <= pos)
+        if window:
+            live &= base + bs > pos - window
+
+        @pl.when(live)
+        def _block():
+            q = q_ref[0, 0].astype(jnp.float32)       # (rep, hd)
+            k = k_ref[0, :, 0].astype(jnp.float32)    # (bs, hd)
+            v = v_ref[0, :, 0].astype(jnp.float32)
+            if int8:  # in-register dequant against the scale pools
+                k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+                v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+            ctx = base + jax.lax.broadcasted_iota(jnp.int32, (rep, bs), 1)
+            valid = ctx <= pos
+            if window:
+                valid &= ctx > pos - window
+            s = jnp.where(valid, s, NEG_INF)
+            m_prev = m_ref[...]  # (rep, 1)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+            l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+            acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_ref[...] = m_new
+
+        @pl.when(j == pl.num_programs(2) - 1)
+        def _flush():
+            o_ref[0, 0] = (acc_ref[...]
+                           / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_flash_decode_raw(q, k_pool, v_pool, k_scale, v_scale, block_table,
+                           pos, *, scale: float, window: int = 0,
+                           interpret: bool = False):
+    """One-token flash decode against shared paged pools.
+
+    q: (B, KV, rep, hd); k_pool/v_pool: (NB, bs, KV, hd) bf16/f32 or int8
+    (with k_scale/v_scale (NB, bs, KV) pools, else pass ``None``);
+    block_table: (B, MB) int32, ``-1`` = unallocated; pos: (B,) int32 —
+    position of the token being decoded (its K/V already written to the
+    pool).  Returns (B, KV, rep, hd) in q.dtype.
+    """
+    b, kv, rep, hd = q.shape
+    bs = k_pool.shape[1]
+    mb = block_table.shape[1]
+    int8 = k_scale is not None
+    grid = (b, kv, mb)
+
+    def blk(tbl_ref, pos_ref, bi, ji):
+        # Unallocated entries clamp to block 0: the DMA still lands (the
+        # pipeline always fetches) but pl.when skips the compute.
+        return jnp.maximum(tbl_ref[bi, ji], 0)
+
+    q_spec = pl.BlockSpec((1, 1, rep, hd), lambda b_, h, j, t, p: (b_, h, 0, 0))
+    kv_spec = pl.BlockSpec((1, bs, 1, hd),
+                           lambda b_, h, j, t, p: (blk(t, p, b_, j), 0, h, 0))
+    in_specs = [q_spec, kv_spec, kv_spec]
+    inputs = [q, k_pool, v_pool]
+    if int8:
+        sc_spec = pl.BlockSpec((1, bs, 1),
+                               lambda b_, h, j, t, p: (blk(t, p, b_, j), 0, h))
+        in_specs += [sc_spec, sc_spec]
+        inputs += [k_scale, v_scale]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda b_, h, j, t, p: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _make_kernel(bs, rep, scale, window, int8),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, rep, hd), q.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, pos, *inputs)

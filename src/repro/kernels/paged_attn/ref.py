@@ -1,0 +1,48 @@
+"""jnp reference for paged decode: the dense gather path, kept as the oracle.
+
+This is (deliberately) the exact computation ``_attn_decode_paged`` ran before
+the Pallas kernel existed — gather the full logical span through the block
+table into a dense ``(B, T_ctx, KV, hd)`` tensor, dequantize int8 pools, and
+run the grouped `_sdpa`.  It reuses :func:`repro.models.attention._sdpa` and
+``_kv_dequant`` directly rather than re-implementing them, so ``impl="jnp"``
+through the serving stack stays bit-identical to the pre-kernel path by
+construction, and kernel parity tests compare against serving-truth numerics
+rather than a second hand-rolled softmax.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import _kv_dequant, _sdpa
+
+
+def paged_decode_ref(q, k_pool, v_pool, block_table, pos, *, k_scale=None,
+                     v_scale=None, window: int = 0):
+    """Dense-gather paged decode attention (post-scatter pools).
+
+    q: (B, 1, H, hd) roped queries; k_pool/v_pool: (NB, bs, KV, hd) with the
+    current token's K/V already written; block_table: (B, MB) int32 dense
+    prefixes, ``-1`` = unallocated; pos: (B,) int32.  Returns (B, 1, H, hd).
+    """
+    nb, bs = k_pool.shape[0], k_pool.shape[1]
+    mb = block_table.shape[1]
+    t_ctx = mb * bs
+    positions = jnp.asarray(pos, jnp.int32)[:, None]  # (B, 1)
+    tbl = jnp.where(block_table < 0, nb, block_table)  # OOB sentinel
+    ctx = jnp.arange(t_ctx)
+    gidx = tbl[:, ctx // bs] * bs + ctx % bs  # (B, T_ctx), OOB >= nb*bs
+    valid = (ctx[None, :] <= positions) & (gidx < nb * bs)
+    if window:
+        valid &= ctx[None, :] > positions - window
+    safe = jnp.minimum(gidx, nb * bs - 1)
+    kf = k_pool.reshape((nb * bs,) + k_pool.shape[2:])
+    vf = v_pool.reshape((nb * bs,) + v_pool.shape[2:])
+    if k_scale is not None:
+        ks = k_scale.reshape(nb * bs, -1)
+        vs = v_scale.reshape(nb * bs, -1)
+        k = _kv_dequant(kf[safe], ks[safe], q.dtype)
+        v = _kv_dequant(vf[safe], vs[safe], q.dtype)
+    else:
+        k, v = kf[safe], vf[safe]  # (B, T_ctx, KV, hd)
+    mask = valid[:, None, None, None, :]  # (B,1,1,1,T_ctx)
+    return _sdpa(q, k, v, mask)

@@ -119,9 +119,14 @@ def main():
     ap.add_argument("--paged-kv", action="store_true",
                     help="lower decode cells against the paged KV pool + "
                          "block table instead of the per-slot ring")
+    ap.add_argument("--attn-impl", default=None, choices=["jnp", "pallas"],
+                    help="paged-decode attention engine to lower (shorthand "
+                         "for --override attn_impl=...)")
     args = ap.parse_args()
 
     overrides = {}
+    if args.attn_impl:
+        overrides["attn_impl"] = args.attn_impl
     for ov in args.override:
         k, v = ov.split("=", 1)
         if v.lower() in ("true", "false"):

@@ -37,6 +37,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--kv", default="paged", choices=["paged", "ring"],
                     help="paged block-table cache or the legacy fixed ring")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["jnp", "pallas"],
+                    help="paged-decode attention engine (default: pallas on "
+                         "TPU, jnp elsewhere)")
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0,
                     help="noise-key seed (noisy serve is reproducible in it)")
@@ -55,7 +59,7 @@ def main():
     with engine.activate():
         server = Server(cfg, params, engine=engine, slots=args.slots,
                         kv=args.kv, block_size=args.block_size,
-                        buckets=(bucket,),
+                        buckets=(bucket,), attn_impl=args.attn_impl,
                         max_seq_len=bucket + args.max_new)
         handles = [server.submit(Request(
             rng.integers(0, cfg.vocab_size,
@@ -67,7 +71,7 @@ def main():
     for h in handles:
         print(f"req{h.rid}: {len(h.tokens)} tokens -> {h.tokens[:8]}...")
     print(f"throughput: {ntok / max(dt, 1e-9):.1f} tok/s "
-          f"({args.kv} lockstep decode; "
+          f"({args.kv} lockstep decode, attn={server.attn_impl}; "
           f"{engine.stats.compiles} compiled steps, "
           f"{engine.stats.traces} traces)")
 

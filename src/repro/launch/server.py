@@ -44,6 +44,7 @@ sampling):
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -104,6 +105,11 @@ class Server:
     buckets: padded prompt lengths to compile prefill for (ascending).
     max_seq_len: hard per-request cap on ``len(prompt) + max_new_tokens``;
         fixes the decode step's logical attention span.
+    attn_impl: paged-decode attention engine — ``"jnp"`` (dense gather) or
+        ``"pallas"`` (fused flash-decode kernel over the block table).
+        ``None`` (default) picks the kernel on TPU and keeps the config's
+        value elsewhere (off-TPU the kernel would run interpreted —
+        correct but slow, so only tests opt in).  Ignored for ``kv="ring"``.
     fail_at: decode tick indices at which to inject a crash (chaos drill).
     """
 
@@ -112,9 +118,16 @@ class Server:
                  num_blocks: Optional[int] = None,
                  buckets: Sequence[int] = (16, 32, 64),
                  max_seq_len: Optional[int] = None,
+                 attn_impl: Optional[str] = None,
                  fail_at: Optional[Sequence[int]] = None):
         if kv not in ("paged", "ring"):
             raise ValueError(f"kv must be 'paged' or 'ring', got {kv!r}")
+        if attn_impl is None and kv == "paged" and \
+                jax.default_backend() == "tpu":
+            attn_impl = "pallas"
+        if attn_impl is not None and attn_impl != cfg.attn_impl:
+            cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+        self.attn_impl = cfg.attn_impl if kv == "paged" else "ring"
         self.cfg, self.params = cfg, params
         self.engine = engine or Engine()
         self.slots = slots

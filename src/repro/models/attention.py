@@ -198,7 +198,7 @@ def attn_forward(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
 def attn_prefill(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
                  window: int = 0, cache_len: int | None = None,
                  q_chunk: int = 512, kv_dtype: str = "bf16",
-                 true_len=None, **imc):
+                 true_len=None, use_flash: bool = False, **imc):
     """Prefill: forward over the prompt AND build the decode cache.
 
     cache_len defaults to S for global layers, window for local layers.
@@ -210,13 +210,22 @@ def attn_prefill(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
     masking, the paged-cache scatter) treat the padded tail as empty.  The
     forward itself needs no extra masking — causal attention already keeps
     padded keys out of every valid query row — so one bucketed executable
-    serves all prompt lengths up to S bit-identically.
+    serves all prompt lengths up to S bit-identically.  That same causal
+    argument makes ``use_flash`` (the Pallas flash kernel) safe under
+    right-padding: per-bucket ``s_valid`` is the padded length, and padded
+    *query* rows produce garbage that the cache scatter (key_pos = -1) and
+    the caller's logit slicing at ``true_len - 1`` never consume.
     """
     b, s, _ = x.shape
     positions = jnp.arange(s)[None, :]
     q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim,
                            positions, rope_theta, **imc)
-    out = _chunked_causal(q, k, v, window=window, q_chunk=q_chunk)
+    if use_flash:
+        from repro.kernels.flash_attn.ops import flash_attention
+
+        out = flash_attention(q, k, v, window=window)
+    else:
+        out = _chunked_causal(q, k, v, window=window, q_chunk=q_chunk)
     t_alloc = cache_len if cache_len is not None else (window if window else s)
     if t_alloc <= s:  # keep the last t_alloc entries, ring-aligned so that
         # entry for position p sits at slot p % t_alloc (decode invariant)
@@ -246,22 +255,27 @@ def attn_prefill(params, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
 
 def _attn_decode_paged(params, x, cache: PagedAttnCache, pos, block_table, *,
                        n_heads, n_kv_heads, head_dim, rope_theta,
-                       window: int = 0, **imc):
+                       window: int = 0, attn_impl: str = "jnp", **imc):
     """One-token decode against the shared paged pools.
 
     x: (B, 1, D); pos: (B,) int32; block_table: (B, MB) int32, -1 = empty.
     Each row writes its new K/V at flat pool row
     ``table[pos // bs] * bs + pos % bs`` (rows of inactive slots map out of
     bounds and are dropped), then attends over the fixed logical span
-    ``MB * bs`` gathered through its table.  Gather row ``i`` IS position
-    ``i`` (tables are dense prefixes), so the validity mask is just
-    ``i <= pos`` limited to allocated blocks — bit-identical to the ring
+    ``MB * bs`` through its table via
+    :func:`repro.kernels.paged_attn.ops.paged_attention`.  Gather row ``i``
+    IS position ``i`` (tables are dense prefixes), so the validity mask is
+    just ``i <= pos`` limited to allocated blocks.
+
+    ``attn_impl="jnp"`` is the dense gather path — bit-identical to the ring
     oracle because the extra masked rows contribute exact zeros.
+    ``attn_impl="pallas"`` runs the fused flash-decode kernel: it reads the
+    post-scatter pools block-by-block through the table (the gathered span
+    never touches HBM), within one output ulp of the jnp path (online
+    softmax rounds its rescaling differently from one-shot softmax).
     """
     b = x.shape[0]
     nb, bs = cache.k.shape[0], cache.k.shape[1]
-    mb = block_table.shape[1]
-    t_ctx = mb * bs  # fixed logical attention span per compiled step
     pos = jnp.asarray(pos, jnp.int32)
     positions = (pos if pos.ndim else jnp.full((b,), pos))[:, None]  # (B,1)
     q, k_new, v_new = _project_qkv(params, x, n_heads, n_kv_heads, head_dim,
@@ -272,44 +286,33 @@ def _attn_decode_paged(params, x, cache: PagedAttnCache, pos, block_table, *,
 
     def put(pool, new):  # pool (NB, bs, *tail); new (B, *tail)
         flat = pool.reshape((nb * bs,) + pool.shape[2:])
-        return flat.at[widx].set(new.astype(pool.dtype), mode="drop")
-
-    ctx = jnp.arange(t_ctx)
-    gidx = tbl[:, ctx // bs] * bs + ctx % bs  # (B, T_ctx), OOB >= nb*bs
-    valid = (ctx[None, :] <= positions) & (gidx < nb * bs)  # (B, T_ctx)
-    if window:
-        valid &= ctx[None, :] > positions - window
-    safe = jnp.minimum(gidx, nb * bs - 1)
+        return flat.at[widx].set(new.astype(pool.dtype),
+                                 mode="drop").reshape(pool.shape)
 
     int8_cache = cache.k_scale is not None
     if int8_cache:
         kq_new, ks_new = _kv_quant(k_new)
         vq_new, vs_new = _kv_quant(v_new)
-        kq = put(cache.k, kq_new[:, 0])
-        vq = put(cache.v, vq_new[:, 0])
-        ks = put(cache.k_scale, ks_new[:, 0])
-        vs = put(cache.v_scale, vs_new[:, 0])
-        k = _kv_dequant(kq[safe], ks[safe], q.dtype)
-        v = _kv_dequant(vq[safe], vs[safe], q.dtype)
-        new_cache = PagedAttnCache(kq.reshape(cache.k.shape),
-                                   vq.reshape(cache.v.shape),
-                                   ks.reshape(cache.k_scale.shape),
-                                   vs.reshape(cache.v_scale.shape))
+        new_cache = PagedAttnCache(put(cache.k, kq_new[:, 0]),
+                                   put(cache.v, vq_new[:, 0]),
+                                   put(cache.k_scale, ks_new[:, 0]),
+                                   put(cache.v_scale, vs_new[:, 0]))
     else:
-        kf = put(cache.k, k_new[:, 0])
-        vf = put(cache.v, v_new[:, 0])
-        k, v = kf[safe], vf[safe]  # (B, T_ctx, KV, hd)
-        new_cache = PagedAttnCache(kf.reshape(cache.k.shape),
-                                   vf.reshape(cache.v.shape))
-    mask = valid[:, None, None, None, :]  # (B,1,1,1,T_ctx)
-    out = _sdpa(q, k, v, mask)
+        new_cache = PagedAttnCache(put(cache.k, k_new[:, 0]),
+                                   put(cache.v, v_new[:, 0]))
+    from repro.kernels.paged_attn.ops import paged_attention
+
+    out = paged_attention(q, new_cache.k, new_cache.v, block_table, p,
+                          k_scale=new_cache.k_scale,
+                          v_scale=new_cache.v_scale, window=window,
+                          impl=attn_impl)
     y = dense(params["wo"], out.reshape(b, 1, -1), **imc)
     return y, new_cache
 
 
 def attn_decode(params, x, cache, pos, *, n_heads, n_kv_heads,
                 head_dim, rope_theta, window: int = 0, block_table=None,
-                **imc):
+                attn_impl: str = "jnp", **imc):
     """One-token decode. x: (B, 1, D); pos: scalar int32 OR (B,) int32 —
     per-row positions support continuous batching, where slots admitted at
     different ticks sit at different sequence positions.
@@ -319,13 +322,15 @@ def attn_decode(params, x, cache, pos, *, n_heads, n_kv_heads,
     layers T_alloc == context so the slot is just ``pos``).  Paged path
     (``cache`` a :class:`PagedAttnCache`): routes through the per-slot
     ``block_table`` instead — the ring stays the tested oracle.
+    ``attn_impl`` selects the paged engine ("jnp" dense gather oracle /
+    "pallas" fused flash-decode kernel); the ring path ignores it.
     """
     if isinstance(cache, PagedAttnCache):
         assert block_table is not None, "paged decode needs a block table"
         return _attn_decode_paged(params, x, cache, pos, block_table,
                                   n_heads=n_heads, n_kv_heads=n_kv_heads,
                                   head_dim=head_dim, rope_theta=rope_theta,
-                                  window=window, **imc)
+                                  window=window, attn_impl=attn_impl, **imc)
     b = x.shape[0]
     t_alloc = cache.k.shape[1]
     pos = jnp.asarray(pos, jnp.int32)

@@ -123,9 +123,11 @@ def _mix(cfg, params, x, kind, mode, cache, pos, prefill_extra=0,
                 cache_len = window if window else x.shape[1] + prefill_extra
             return attn_prefill(params["attn"], x, q_chunk=cfg.q_chunk,
                                 cache_len=cache_len, kv_dtype=cfg.kv_dtype,
-                                true_len=true_len, **kw)
+                                true_len=true_len,
+                                use_flash=cfg.use_flash_kernel, **kw)
         return attn_decode(params["attn"], x, cache, pos,
-                           block_table=block_table, **kw)
+                           block_table=block_table,
+                           attn_impl=cfg.attn_impl, **kw)
     if kind == "rglru":
         if mode in ("train", "prefill"):
             y, (h, cs) = rglru_forward(params["rglru"], x, **imc)

@@ -68,12 +68,18 @@ def to_markdown(snap: Optional[Dict] = None,
     return "\n".join(lines)
 
 
-def serving_slos(registry: Optional[Registry] = None) -> Dict:
+def serving_slos(registry: Optional[Registry] = None,
+                 attn_impl: Optional[str] = None) -> Dict:
     """The serving SLO trio as flat row fields (ms units, JSON-friendly).
 
     Pulled from the Server's canonical metric names; absent metrics yield
     ``None`` so bench rows stay diffable across configurations that never
     served (e.g. train-only runs).
+
+    ``attn_impl`` tags which decode-attention engine produced the numbers
+    (pass :attr:`Server.attn_impl`); it rides along in the row so
+    ``benchmarks/run.py --compare`` never diffs jnp-path SLOs against
+    kernel-path SLOs silently.
     """
     snap = snapshot(registry)
     hists, gauges = snap["histograms"], snap["gauges"]
@@ -83,9 +89,12 @@ def serving_slos(registry: Optional[Registry] = None) -> Dict:
         return round(h["p50"] * 1e3, 3) if h.get("count") else None
 
     occ = gauges.get("server.block_occupancy", {})
-    return {"ttft_ms": p50("server.ttft_s"),
+    slos = {"ttft_ms": p50("server.ttft_s"),
             "tpot_ms": p50("server.tpot_s"),
             "occupancy_peak": round(occ["hwm"], 3) if occ else None}
+    if attn_impl is not None:
+        slos["attn_impl"] = attn_impl
+    return slos
 
 
 def merge_into_bench(record: Dict, registry: Optional[Registry] = None
