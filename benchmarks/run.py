@@ -88,11 +88,67 @@ def _serve_once(cfg, params, lengths, max_new, kv, attn_impl=None):
         "step_ms": round(host.ewma_time * 1e3, 3) if host else None,
         "compiled_steps": engine.stats.compiles,
         "traces": engine.stats.traces,
-        **serving_slos(registry, attn_impl=server.attn_impl),
+        **serving_slos(registry, attn_impl=server.attn_impl, n_hosts=1),
         "telemetry": snapshot(registry),
     }
     if server.attn_impl == "pallas" and jax.default_backend() != "tpu":
         row["interpret"] = True  # CPU interpreter row: exempt from perf bars
+    return row
+
+
+def _serve_fleet_once(cfg, params, lengths, max_new, kv, n_hosts,
+                      attn_impl=None):
+    """One FleetServer run over an N-host virtual fleet; returns a row.
+
+    Same warmup + timed-waves protocol as :func:`_serve_once`, with SLOs read
+    off the MERGED per-host registry view (exact fleet percentiles) and the
+    row tagged ``n_hosts=N`` so ``--compare`` never diffs it against a
+    single-host sibling.
+    """
+    import numpy as np
+
+    from repro.fleet import FleetEngine, FleetServer, LocalCoordinator
+    from repro.launch.server import Request
+    from repro.telemetry import clock, serving_slos, snapshot
+
+    buckets = sorted({-(-n // 16) * 16 for n in lengths})
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in lengths]
+    fleet = FleetEngine(LocalCoordinator(n_hosts))
+    server = FleetServer(cfg, params, fleet, slots=4, kv=kv, block_size=8,
+                         buckets=buckets, attn_impl=attn_impl,
+                         max_seq_len=max(buckets) + max_new)
+    for p in prompts:  # warmup wave: traces + compiles land here
+        server.submit(Request(p, max_new_tokens=max_new))
+    server.drain()
+    warm = fleet.total_traces()
+    for h in fleet.active_hosts():  # SLOs cover steady-state waves only
+        fleet.engine(h).registry.reset()
+    timed = []
+    d0, t0 = server.total_decode_s(), clock()
+    for _ in range(4):
+        wave = [server.submit(Request(p, max_new_tokens=max_new))
+                for p in prompts]
+        server.drain()
+        timed += wave
+    dt = clock() - t0
+    decode_dt = server.total_decode_s() - d0
+    assert fleet.total_traces() == warm, "steady-state recompile in bench"
+    tokens = sum(len(h.tokens) - 1 for h in timed)
+    merged = fleet.merged_registry()
+    ewmas = [fleet.monitor.hosts[h].ewma_time
+             for h in fleet.active_hosts() if h in fleet.monitor.hosts]
+    row = {
+        "tokens_per_s": round(tokens / decode_dt, 2),
+        "e2e_tokens_per_s": round(sum(len(h.tokens) for h in timed) / dt, 2),
+        "step_ms": round(1e3 * sum(ewmas) / len(ewmas), 3) if ewmas else None,
+        "compiled_steps": sum(fleet.engine(h).stats.compiles
+                              for h in fleet.active_hosts()),
+        "traces": fleet.total_traces(),
+        **serving_slos(merged, attn_impl=server.attn_impl, n_hosts=n_hosts),
+        "telemetry": snapshot(merged),
+    }
     return row
 
 
@@ -146,16 +202,25 @@ def serve_spec_rows(smoke: bool = True):
                          attn_impl=attn_impl)
         rows.append({"spec": label or spec.label, "kv": kv, "mix": mix,
                      "arch": cfg0.name, **row})
+    # virtual-fleet sibling of the float paged uniform row: same traffic
+    # split over 2 hosts, SLOs off the merged registry (needs >= 2 devices;
+    # CI forces them with --xla_force_host_platform_device_count)
+    if len(jax.devices()) >= 2:
+        cfg = dataclasses.replace(cfg0, fabric=None, imc_mode="off")
+        row = _serve_fleet_once(cfg, params, uniform, max_new, "paged", 2)
+        rows.append({"spec": "float", "kv": "paged", "mix": "uniform",
+                     "arch": cfg0.name, **row})
     return rows
 
 
 def compare(old_path: str, new_path: str) -> None:
     """Diff two BENCH_imc.json runs row-by-row (markdown table to stdout).
 
-    Rows are keyed by (spec, kv, mix, attn_impl) — a jnp-path row is never
-    diffed against a kernel-path row.  Files predating the ``attn_impl`` tag
-    default to the engine they actually ran: ``ring`` geometry, or the jnp
-    gather path for paged rows.
+    Rows are keyed by (spec, kv, mix, attn_impl, n_hosts) — a jnp-path row
+    is never diffed against a kernel-path row, and a single-host row is
+    never diffed against a fleet row.  Files predating the ``attn_impl`` /
+    ``n_hosts`` tags default to what they actually ran: ``ring`` geometry or
+    the jnp gather path, and one host.
     """
     def impl_of(r):
         kv = r.get("kv", "ring")
@@ -165,7 +230,8 @@ def compare(old_path: str, new_path: str) -> None:
         with open(p) as f:
             rec = json.load(f)
         return {(r["spec"], r.get("kv", "ring"), r.get("mix", "uniform"),
-                 impl_of(r)): r for r in rec["rows"]}
+                 impl_of(r), r.get("n_hosts", 1) or 1): r
+                for r in rec["rows"]}
 
     def pct(old, new):
         if not old or old in (None, 0) or new is None:
@@ -173,16 +239,16 @@ def compare(old_path: str, new_path: str) -> None:
         return f"{100.0 * (new - old) / old:+.1f}%"
 
     old, new = load(old_path), load(new_path)
-    print("| spec | kv | mix | attn | tok/s old | tok/s new | Δ | "
+    print("| spec | kv | mix | attn | hosts | tok/s old | tok/s new | Δ | "
           "step ms old | step ms new | Δ | ttft ms old | ttft ms new | Δ | "
           "tpot ms old | tpot ms new | Δ |")
     print("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
-          "---|")
+          "---|---|")
     for key in sorted(set(old) | set(new)):
         o, n = old.get(key, {}), new.get(key, {})
         attn = key[3] + (" (interpret)" if (o.get("interpret")
                                             or n.get("interpret")) else "")
-        cells = [key[0], key[1], key[2], attn]
+        cells = [key[0], key[1], key[2], attn, key[4]]
         for field in ("tokens_per_s", "step_ms", "ttft_ms", "tpot_ms"):
             ov, nv = o.get(field), n.get(field)
             cells += [ov if ov is not None else "—",

@@ -31,6 +31,54 @@ from repro.runtime.straggler import StragglerMonitor
 from repro.telemetry import (export_chrome_trace, serving_slos, to_markdown)
 
 
+def serve_fleet(cfg, params, rng, lengths, buckets, args):
+    """The same waves through an N-host virtual fleet: round-robin routing,
+    per-host Engines, and SLOs off the merged (exact) fleet registry.
+    Steady-state trace-freeness holds per host, so the FLEET trace total is
+    flat across waves 2+ too."""
+    from repro.fleet import FleetEngine, FleetServer, LocalCoordinator
+
+    fleet = FleetEngine(LocalCoordinator(args.fleet_hosts),
+                        noise_seed=args.seed)
+    server = FleetServer(cfg, params, fleet, slots=args.slots, kv=args.kv,
+                         block_size=args.block_size, buckets=buckets,
+                         attn_impl=args.attn_impl,
+                         max_seq_len=max(buckets) + args.max_new)
+    warm_traces = None
+    total_tokens, t0 = 0, time.perf_counter()
+    for wave in range(args.waves):
+        handles = [server.submit(Request(
+            prompt=rng.integers(0, cfg.vocab_size, size=n).astype(np.int32),
+            max_new_tokens=args.max_new)) for n in lengths]
+        server.drain()
+        assert all(h.done for h in handles), \
+            [(h.status, h.reason) for h in handles]
+        total_tokens += sum(len(h.tokens) for h in handles)
+        # round-robin rotates which host sees which bucket, so warmup takes
+        # n_hosts waves; every later wave must be trace-free fleet-wide
+        if wave == args.fleet_hosts - 1:
+            warm_traces = fleet.total_traces()
+        elif wave >= args.fleet_hosts:
+            assert fleet.total_traces() == warm_traces, (
+                f"steady-state recompile: fleet traces went {warm_traces} "
+                f"-> {fleet.total_traces()} on wave {wave}")
+    dt = time.perf_counter() - t0
+    for h in server.handles:
+        print(f"req{h.rid}@host{h.host} (len={len(h.request.prompt)}): "
+              f"generated {h.tokens}")
+    slos = server.slos()
+    print(f"{len(server.handles)} requests over {server.n_hosts} virtual "
+          f"hosts; {total_tokens / dt:.1f} tok/s end-to-end; "
+          f"fleet traces {fleet.total_traces()} "
+          f"(per host {fleet.traces_by_host()}), waves 2+ trace-free")
+    print(f"merged SLOs (n_hosts={slos['n_hosts']}): ttft p50 "
+          f"{slos['ttft_ms']} ms, tpot p50 {slos['tpot_ms']} ms, peak "
+          f"block occupancy {slos['occupancy_peak']}")
+    if args.telemetry:
+        print(to_markdown(registry=fleet.merged_registry()))
+    print("serve_batched OK (fleet)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
@@ -53,6 +101,10 @@ def main():
                          "JSON (loadable in Perfetto / chrome://tracing)")
     ap.add_argument("--telemetry", action="store_true",
                     help="print the telemetry snapshot as markdown tables")
+    ap.add_argument("--fleet-hosts", type=int, default=1,
+                    help="virtual fleet: partition local devices into N "
+                         "hosts (device count must divide), route requests "
+                         "round-robin, and report merged-registry SLOs")
     add_fabric_cli(ap)
     args = ap.parse_args()
 
@@ -64,6 +116,10 @@ def main():
     buckets = sorted({-(-n // 16) * 16 for n in lengths})
     rng = np.random.default_rng(0)
     params = init_params(jax.random.key(0), cfg)
+
+    if args.fleet_hosts > 1:
+        serve_fleet(cfg, params, rng, lengths, buckets, args)
+        return
 
     engine = Engine(noise_seed=args.seed, monitor=StragglerMonitor())
     with engine.activate():

@@ -1,0 +1,25 @@
+"""Fleet subsystem: many Engines on many hosts under one controller.
+
+  coordinator     — who am I / rendezvous: ``DistributedCoordinator``
+                    (jax.distributed) and ``LocalCoordinator`` (in-process
+                    virtual fleet over device sub-meshes, CI-testable).
+  fleet_engine    — per-host Engines + fleet StragglerMonitor +
+                    ``FleetTrainLoop`` (straggler shrink + checkpoint-resume
+                    over the existing FaultTolerantLoop).
+  fleet_server    — per-host Servers, round-robin routing, merged SLOs.
+  telemetry_merge — tagged per-host Registry snapshots -> one exact fleet
+                    view (``Registry.merge``).
+"""
+from repro.fleet.coordinator import (Coordinator, DistributedCoordinator,
+                                     FleetHost, LocalCoordinator)
+from repro.fleet.fleet_engine import (FleetEngine, FleetTrainLoop,
+                                      HostStragglerError)
+from repro.fleet.fleet_server import FleetServer
+from repro.fleet.telemetry_merge import (fleet_slos, merge_registries,
+                                         merge_tagged, tagged_snapshot)
+
+__all__ = [
+    "Coordinator", "DistributedCoordinator", "FleetHost", "LocalCoordinator",
+    "FleetEngine", "FleetTrainLoop", "HostStragglerError", "FleetServer",
+    "fleet_slos", "merge_registries", "merge_tagged", "tagged_snapshot",
+]

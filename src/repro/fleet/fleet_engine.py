@@ -1,0 +1,228 @@
+"""FleetEngine + FleetTrainLoop: the Engine/loop stack on every host.
+
+:class:`FleetEngine` owns one :class:`repro.launch.engine.Engine` per host
+the coordinator drives — each with its own sub-mesh and its own telemetry
+:class:`Registry` — plus ONE fleet-level :class:`StragglerMonitor` fed with
+real per-host step times (the single-controller stack only ever showed it
+host 0).  :meth:`FleetEngine.merged_registry` is the controller's one fleet
+telemetry view (exact histogram merge; see
+:mod:`repro.fleet.telemetry_merge`).
+
+:class:`FleetTrainLoop` composes the existing pieces instead of re-inventing
+them:
+
+  * the inner loop IS :class:`repro.runtime.fault_tolerance.FaultTolerantLoop`
+    — checkpoint cadence, resume-from-latest, telemetry — with its
+    ``host_times_fn`` supplying the per-host wall times the fleet step just
+    measured and ``on_straggler`` escalating newly flagged hosts;
+  * the escalation path is :func:`repro.runtime.elastic.shrink_after_failure`
+    — the flagged host's devices leave the plan (whole-host units, per-replica
+    batch preserved), the monitor forgets the host
+    (:meth:`StragglerMonitor.replace_host`), and the supervisor re-enters
+    ``FaultTolerantLoop.run``, which resumes from the latest committed
+    checkpoint.  Surviving hosts keep their compiled-step caches, so the
+    resumed steps replay with zero new traces.
+
+Each virtual host steps its own state replica on its own sub-mesh (states
+never cross meshes — committed arrays from one host's devices would clash
+with another host's computation).  Checkpoints store the controller's
+replica as host arrays, so any surviving host can re-fan-out from a restore.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.fleet.coordinator import Coordinator, LocalCoordinator
+from repro.fleet.telemetry_merge import merge_registries, tagged_snapshot
+from repro.launch.engine import Engine
+from repro.runtime.elastic import MeshPlan, shrink_after_failure
+from repro.runtime.fault_tolerance import FaultTolerantLoop
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor
+from repro.telemetry import Registry, clock
+
+__all__ = ["FleetEngine", "FleetTrainLoop", "HostStragglerError"]
+
+
+class HostStragglerError(RuntimeError):
+    """Raised out of the inner loop when the monitor flags hosts; carries
+    the host indices so the supervisor can shrink around them."""
+
+    def __init__(self, hosts: List[int]):
+        super().__init__(f"straggling hosts flagged for removal: {hosts}")
+        self.hosts = list(hosts)
+
+
+class FleetEngine:
+    """One Engine per driven host, one fleet monitor, one merged telemetry
+    view.
+
+    ``noise_seed`` is shared across hosts on purpose: in the replicated
+    control-plane model every host folds the same key stream, so per-host
+    outputs stay bit-identical (the fleet-vs-single-host oracle tests rely
+    on it, and it matches real SPMD where the key is a broadcast scalar).
+    """
+
+    def __init__(self, coordinator: Coordinator, *, noise_seed: int = 0,
+                 straggler_cfg: Optional[StragglerConfig] = None):
+        self.coordinator = coordinator
+        self.monitor = StragglerMonitor(
+            cfg=straggler_cfg or StragglerConfig())
+        self.engines: Dict[int, Engine] = {
+            h.index: Engine(mesh=h.mesh, noise_seed=noise_seed,
+                            registry=Registry())
+            for h in coordinator.hosts()}
+        self._hosts = {h.index: h for h in coordinator.hosts()}
+        self._active = sorted(self.engines)
+        self.removed: List[int] = []
+
+    # ------------------------------------------------------------ topology
+    def active_hosts(self) -> List[int]:
+        return list(self._active)
+
+    @property
+    def controller(self) -> int:
+        """The controller host (host 0, or its successor after a shrink)."""
+        c = self.coordinator.controller
+        return c if c in self._active else self._active[0]
+
+    def host(self, index: int):
+        return self._hosts[index]
+
+    def engine(self, index: int) -> Engine:
+        return self.engines[index]
+
+    def remove_host(self, index: int) -> None:
+        """Shrink path: the host leaves the fleet (its Engine is retired,
+        its monitor entry + EWMA gauge are dropped).  Its Registry is kept —
+        history already recorded still merges into the fleet view."""
+        self._active.remove(index)
+        self.removed.append(index)
+        self.monitor.replace_host(index)
+        if isinstance(self.coordinator, LocalCoordinator):
+            self.coordinator.drop_host(index)
+
+    # ----------------------------------------------------------- telemetry
+    def observe_step_times(self, times: Dict[int, float]) -> List[int]:
+        """Feed ONE step's per-host wall times; returns newly flagged hosts.
+
+        Call once per fleet step with the full dict — feeding hosts one at a
+        time would multiply the monitor's strike cadence by the fleet size.
+        """
+        return self.monitor.record_step(times)
+
+    def snapshots(self) -> Dict[int, Dict]:
+        """Per-host tagged snapshots (driven hosts only; gather for all)."""
+        return {h: tagged_snapshot(self.engines[h].registry, h)
+                for h in sorted(self.engines)}
+
+    def merged_registry(self) -> Registry:
+        """The fleet telemetry view (exact merge across per-host feeds)."""
+        return merge_registries(
+            {h: e.registry for h, e in self.engines.items()},
+            self.coordinator)
+
+    # --------------------------------------------------------------- stats
+    def total_traces(self) -> int:
+        return sum(e.stats.traces for e in self.engines.values())
+
+    def traces_by_host(self) -> Dict[int, int]:
+        return {h: e.stats.traces for h, e in self.engines.items()}
+
+
+@dataclass
+class FleetTrainLoop:
+    """Run the fault-tolerant train loop on every host of a fleet.
+
+    ``make_step(engine, host) -> (state, batch, step) -> state`` builds the
+    per-host step callable once (under no mesh context; the loop activates
+    the host's mesh around every call).  ``delay(host, step) -> extra_s``
+    injects synthetic per-host skew into the *observed* times — chaos drills
+    flag a straggler without sleeping through real seconds.
+    """
+
+    fleet: FleetEngine
+    ckpt_root: str
+    make_step: Callable[[Engine, int], Callable[[Any, Any, int], Any]]
+    batch_fn: Callable[[int], Any]
+    plan: MeshPlan
+    model_parallel: int = 2
+    ckpt_every: int = 2
+    keep_last: int = 3
+    delay: Optional[Callable[[int, int], float]] = None
+    on_step: Optional[Callable[[int, Dict[int, float]], None]] = None
+    shrinks: List[MeshPlan] = field(default_factory=list)
+
+    def __post_init__(self):
+        self._steps = {h: self.make_step(self.fleet.engine(h), h)
+                       for h in self.fleet.active_hosts()}
+        self._replicas: Dict[int, Any] = {}
+        self._last_times: Dict[int, float] = {}
+
+    # ------------------------------------------------------------ plumbing
+    def _fan_out(self, state):
+        """Host (uncommitted) copy of a state tree: placeable on any host's
+        sub-mesh without cross-mesh device clashes."""
+        return jax.tree.map(lambda x: jax.device_get(x), state)
+
+    def _fleet_step(self, state, batch, step):
+        host_state = None
+        times: Dict[int, float] = {}
+        for h in self.fleet.active_hosts():
+            rep = self._replicas.get(h)
+            if rep is None:
+                if host_state is None:
+                    host_state = self._fan_out(state)
+                rep = host_state
+            eng = self.fleet.engine(h)
+            t0 = clock()
+            with eng.activate():
+                rep = self._steps[h](rep, batch, step)
+            dt = clock() - t0
+            if self.delay is not None:
+                dt += self.delay(h, step)
+            times[h] = dt
+            self._replicas[h] = rep
+        self._last_times = times
+        if self.on_step:
+            self.on_step(step, times)
+        return self._replicas[self.fleet.controller]
+
+    def _handle_stragglers(self, hosts: List[int]):
+        lost = sum(self.fleet.host(h).n_devices for h in hosts)
+        self.plan = shrink_after_failure(self.plan, lost,
+                                         model_parallel=self.model_parallel)
+        self.shrinks.append(self.plan)
+        for h in hosts:
+            self.fleet.remove_host(h)
+            self._steps.pop(h, None)
+        # every replica re-fans-out from the restored checkpoint: survivors
+        # replay the post-checkpoint steps bit-identically to a fleet that
+        # never contained the straggler
+        self._replicas.clear()
+
+    # ----------------------------------------------------------------- run
+    def run(self, init_state, n_steps: int):
+        """Train to ``n_steps``; flagged hosts shrink the plan and the loop
+        resumes from the latest committed checkpoint.  Returns the
+        controller replica's final state."""
+
+        def escalate(flagged):
+            raise HostStragglerError(flagged)
+
+        while True:
+            loop = FaultTolerantLoop(
+                self.ckpt_root, self._fleet_step, self.batch_fn,
+                ckpt_every=self.ckpt_every, keep_last=self.keep_last,
+                monitor=self.fleet.monitor,
+                host_times_fn=lambda dt: dict(self._last_times) or {0: dt},
+                on_straggler=escalate)
+            try:
+                return loop.run(init_state, n_steps)
+            except HostStragglerError as e:
+                if len(self.fleet.active_hosts()) <= len(e.hosts):
+                    raise  # nothing left to shrink onto
+                self._handle_stragglers(e.hosts)
+                self.fleet.coordinator.barrier("fleet.shrink")

@@ -37,14 +37,25 @@ def applicable(arch: str, shape_name: str) -> bool:
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              out_dir: str = OUT_DIR, overrides: dict | None = None,
-             tag: str = "", paged_kv: bool = False) -> dict:
+             tag: str = "", paged_kv: bool = False,
+             fleet_hosts: int = 1) -> dict:
     import dataclasses
 
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     shape = SHAPES[shape_name]
-    engine = Engine(mesh=make_production_mesh(multi_pod=multi_pod))
+    if fleet_hosts > 1:
+        # per-host cell: lower/compile on ONE virtual host's sub-mesh — what
+        # every process of an N-host fleet would actually run (global batch
+        # still divides across hosts upstream of this step's shapes).
+        from repro.launch.mesh import make_submesh, partition_devices
+
+        host0 = partition_devices(fleet_hosts)
+        mesh = make_submesh(list(host0[0]), model_parallel=16)
+        engine = Engine(mesh=mesh)
+    else:
+        engine = Engine(mesh=make_production_mesh(multi_pod=multi_pod))
     n_dev = engine.mesh.size
     if paged_kv and shape.kind != "decode":
         raise ValueError("--paged-kv applies to decode shapes only")
@@ -73,8 +84,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "arch": arch, "shape": shape_name,
         "variant": (tag or "baseline") + ("+paged_kv" if paged_kv else ""),
         "overrides": {k: str(v) for k, v in (overrides or {}).items()},
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": (f"fleet{fleet_hosts}_host0" if fleet_hosts > 1
+                 else "2x16x16" if multi_pod else "16x16"),
         "n_devices": n_dev, "kind": shape.kind,
+        "fleet_hosts": fleet_hosts,
         "params_total": cfg.n_params(), "params_active": n_active,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory": {
@@ -122,6 +135,9 @@ def main():
     ap.add_argument("--attn-impl", default=None, choices=["jnp", "pallas"],
                     help="paged-decode attention engine to lower (shorthand "
                          "for --override attn_impl=...)")
+    ap.add_argument("--fleet-hosts", type=int, default=1,
+                    help="lower the cell on ONE virtual host's sub-mesh of "
+                         "an N-host fleet instead of the global mesh")
     args = ap.parse_args()
 
     overrides = {}
@@ -155,7 +171,9 @@ def main():
             if args.paged_kv and SHAPES[shape_name].kind != "decode":
                 continue
             for mp in meshes:
-                mesh_tag = "2x16x16" if mp else "16x16"
+                mesh_tag = (f"fleet{args.fleet_hosts}_host0"
+                            if args.fleet_hosts > 1
+                            else "2x16x16" if mp else "16x16")
                 suffix = f"__{args.tag}" if args.tag else ""
                 tag = f"{arch}__{shape_name}__{mesh_tag}{suffix}"
                 path = os.path.join(args.out, tag + ".json")
@@ -165,7 +183,8 @@ def main():
                 try:
                     rec = run_cell(arch, shape_name, mp, args.out,
                                    overrides=overrides, tag=args.tag,
-                                   paged_kv=args.paged_kv)
+                                   paged_kv=args.paged_kv,
+                                   fleet_hosts=args.fleet_hosts)
                     r = rec["roofline"]
                     print(f"PASS  {tag}: {rec['memory']['peak_per_device_gb']}"
                           f" GiB/dev, dominant={r['dominant']}, "

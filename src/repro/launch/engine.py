@@ -266,3 +266,17 @@ class Engine:
         flagged = self.monitor.record_step({host: dt})
         self.swap_requests.extend(flagged)
         return flagged
+
+    def observe_step_times(self, times: Dict[int, float]) -> List[int]:
+        """Feed ONE step's per-host wall times (fleet path).
+
+        One ``record_step`` call with the full dict — per-host calls would
+        multiply the monitor's strike cadence by the fleet size.
+        """
+        for dt in times.values():
+            self.registry.histogram("engine.observed_step_s").observe(dt)
+        if self.monitor is None:
+            return []
+        flagged = self.monitor.record_step(dict(times))
+        self.swap_requests.extend(flagged)
+        return flagged

@@ -27,6 +27,32 @@ def make_test_mesh(n_devices: int | None = None, model_parallel: int = 2):
     return jax.make_mesh((n // mp, mp), ("data", "model"))
 
 
+def make_submesh(devices, model_parallel: int = 2):
+    """(data, model) mesh over an explicit device subset.
+
+    The virtual-fleet coordinator partitions the local devices into per-host
+    groups; each group gets its own mesh built here (``jax.make_mesh`` always
+    spans ``jax.devices()``, so sub-meshes need the explicit constructor).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    n = len(devices)
+    mp = model_parallel if n % model_parallel == 0 else 1
+    return Mesh(np.asarray(devices).reshape(n // mp, mp), ("data", "model"))
+
+
+def partition_devices(n_hosts: int, devices=None):
+    """Split the local devices into ``n_hosts`` equal contiguous groups."""
+    devices = list(devices if devices is not None else jax.devices())
+    if n_hosts < 1 or len(devices) % n_hosts != 0:
+        raise ValueError(
+            f"cannot split {len(devices)} devices into {n_hosts} equal "
+            f"virtual hosts")
+    per = len(devices) // n_hosts
+    return [tuple(devices[i * per:(i + 1) * per]) for i in range(n_hosts)]
+
+
 def dp_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

@@ -44,6 +44,9 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0,
                     help="noise-key seed (noisy serve is reproducible in it)")
+    ap.add_argument("--fleet-hosts", type=int, default=1,
+                    help="virtual fleet: partition local devices into N "
+                         "hosts, round-robin requests, report merged SLOs")
     add_fabric_cli(ap)
     args = ap.parse_args()
 
@@ -53,27 +56,46 @@ def main():
     cfg = apply_fabric_cli(ap, args, cfg, jitted_what="server")
     rng = np.random.default_rng(0)
     params = init_params(jax.random.key(0), cfg)
-    engine = Engine(noise_seed=args.seed, monitor=StragglerMonitor())
     bucket = max(16, args.prompt_len)
+    server_kw = dict(slots=args.slots, kv=args.kv,
+                     block_size=args.block_size, buckets=(bucket,),
+                     attn_impl=args.attn_impl,
+                     max_seq_len=bucket + args.max_new)
+    requests = [Request(
+        rng.integers(0, cfg.vocab_size,
+                     size=args.prompt_len).astype(np.int32),
+        max_new_tokens=args.max_new) for _ in range(args.requests)]
     t0 = clock()
-    with engine.activate():
-        server = Server(cfg, params, engine=engine, slots=args.slots,
-                        kv=args.kv, block_size=args.block_size,
-                        buckets=(bucket,), attn_impl=args.attn_impl,
-                        max_seq_len=bucket + args.max_new)
-        handles = [server.submit(Request(
-            rng.integers(0, cfg.vocab_size,
-                         size=args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new)) for _ in range(args.requests)]
+    if args.fleet_hosts > 1:
+        from repro.fleet import FleetEngine, FleetServer, LocalCoordinator
+
+        fleet = FleetEngine(LocalCoordinator(args.fleet_hosts),
+                            noise_seed=args.seed)
+        server = FleetServer(cfg, params, fleet, **server_kw)
+        handles = [server.submit(r) for r in requests]
         server.drain()
-    dt = clock() - t0
+        dt = clock() - t0
+        slos = server.slos()
+        traces = fleet.total_traces()
+    else:
+        engine = Engine(noise_seed=args.seed, monitor=StragglerMonitor())
+        with engine.activate():
+            server = Server(cfg, params, engine=engine, **server_kw)
+            handles = [server.submit(r) for r in requests]
+            server.drain()
+        dt = clock() - t0
+        slos = None
+        traces = engine.stats.traces
     ntok = sum(len(h.tokens) for h in handles)
     for h in handles:
         print(f"req{h.rid}: {len(h.tokens)} tokens -> {h.tokens[:8]}...")
     print(f"throughput: {ntok / max(dt, 1e-9):.1f} tok/s "
           f"({args.kv} lockstep decode, attn={server.attn_impl}; "
-          f"{engine.stats.compiles} compiled steps, "
-          f"{engine.stats.traces} traces)")
+          f"{traces} traces)")
+    if slos is not None:
+        print(f"fleet SLOs (n_hosts={slos.get('n_hosts')}): "
+              f"ttft_ms={slos['ttft_ms']} tpot_ms={slos['tpot_ms']} "
+              f"occupancy_peak={slos['occupancy_peak']}")
 
 
 if __name__ == "__main__":

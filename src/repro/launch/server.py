@@ -79,6 +79,7 @@ class Handle:
     status: str = "queued"  # queued | active | done | rejected
     tokens: List[int] = field(default_factory=list)
     slot: Optional[int] = None
+    host: int = 0  # which fleet host serves this request (0 single-host)
     reason: str = ""  # set when rejected
     _next_pos: int = 0  # next KV position this slot writes (host-side)
     _rng: Optional[np.random.Generator] = None
@@ -110,6 +111,10 @@ class Server:
         ``None`` (default) picks the kernel on TPU and keeps the config's
         value elsewhere (off-TPU the kernel would run interpreted —
         correct but slow, so only tests opt in).  Ignored for ``kv="ring"``.
+    host: this server's fleet host index.  Decode-step wall times feed the
+        Engine's straggler monitor under this index, so a fleet of Servers
+        sharing one monitor produces REAL per-host entries instead of
+        everything landing on host 0 (the pre-fleet behavior).
     fail_at: decode tick indices at which to inject a crash (chaos drill).
     """
 
@@ -119,6 +124,7 @@ class Server:
                  buckets: Sequence[int] = (16, 32, 64),
                  max_seq_len: Optional[int] = None,
                  attn_impl: Optional[str] = None,
+                 host: int = 0,
                  fail_at: Optional[Sequence[int]] = None):
         if kv not in ("paged", "ring"):
             raise ValueError(f"kv must be 'paged' or 'ring', got {kv!r}")
@@ -132,6 +138,7 @@ class Server:
         self.engine = engine or Engine()
         self.slots = slots
         self.kv = kv
+        self.host = host
         self.buckets = tuple(sorted(buckets))
         self.max_seq_len = max_seq_len or (max(self.buckets) + 64)
         self.block_size = block_size
@@ -176,7 +183,7 @@ class Server:
     # ----------------------------------------------------------- public API
     def submit(self, request: Request) -> Handle:
         """Queue a request; returns its Handle (possibly already rejected)."""
-        h = Handle(len(self.handles), request)
+        h = Handle(len(self.handles), request, host=self.host)
         h._t_submit = clock()
         self.handles.append(h)
         plen = int(len(request.prompt))
@@ -365,7 +372,7 @@ class Server:
         dt = clock() - t0
         self.decode_s += dt
         self._m_step.observe(dt)
-        self.engine.observe_step_time(dt)
+        self.engine.observe_step_time(dt, host=self.host)
         self.decode_ticks += 1
         finished = []
         n_active = 0

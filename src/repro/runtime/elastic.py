@@ -63,3 +63,17 @@ def shrink_after_failure(plan: MeshPlan, lost_devices: int,
     return plan_mesh(survivors, model_parallel=model_parallel,
                      base_batch=plan.global_batch,
                      batch_per_replica=per_replica)
+
+
+def plan_for_fleet(n_hosts: int, devices_per_host: int, *,
+                   model_parallel: int, base_batch: int,
+                   batch_per_replica: Optional[int] = None) -> MeshPlan:
+    """Fleet-shaped entry point: plan over ``n_hosts x devices_per_host``.
+
+    Thin sugar over :func:`plan_mesh` used by the fleet coordinator so a
+    straggler shrink can re-plan in whole-host units
+    (``shrink_after_failure(plan, devices_per_host * len(flagged), ...)``).
+    """
+    return plan_mesh(n_hosts * devices_per_host,
+                     model_parallel=model_parallel, base_batch=base_batch,
+                     batch_per_replica=batch_per_replica)

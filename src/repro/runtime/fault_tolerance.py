@@ -5,17 +5,22 @@ Wraps any (state, batch) -> state step function with:
   * automatic resume from the latest committed step after a crash,
   * a failure-injection hook (used by tests and chaos drills) that raises at
     chosen steps to prove recovery restores bit-exact state and data cursor,
-  * straggler monitor integration (per-step wall-time feed),
+  * straggler monitor integration — by default the loop feeds its own wall
+    time as host 0; a fleet loop overrides ``host_times_fn`` so the monitor
+    sees REAL per-host entries, and ``on_straggler`` escalates newly flagged
+    hosts to the supervisor (the fleet loop raises there, shrinks the mesh,
+    and re-enters ``run`` — which resumes from the latest checkpoint),
   * telemetry: ``fault.failures`` / ``fault.resumes`` counters and a
     ``fault.step_s`` histogram in the global registry.
 
-This is the single-controller view; at fleet scale each host runs the same
-loop and the checkpoint root lives on shared storage.
+At fleet scale each host runs the same loop with the checkpoint root on
+shared storage; :class:`repro.fleet.FleetTrainLoop` drives one of these per
+controller with the virtual/distributed coordinator supplying per-host times.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.checkpoint.checkpoint import AsyncCheckpointer, latest_step, restore
 from repro.runtime.straggler import StragglerMonitor
@@ -35,6 +40,13 @@ class FaultTolerantLoop:
     keep_last: int = 3
     fail_at: Optional[set] = None  # steps at which to inject a crash
     monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
+    # dt -> {host: wall_s}: what the monitor is fed each step.  None keeps
+    # the single-controller default ({0: dt}); fleet loops supply the real
+    # per-host times their step just measured.
+    host_times_fn: Optional[Callable[[float], Dict[int, float]]] = None
+    # called with hosts the monitor NEWLY flagged this step (checkpoints are
+    # flushed first, so the callback may raise to force a resume-from-ckpt)
+    on_straggler: Optional[Callable[[List[int]], None]] = None
 
     def __post_init__(self):
         self._ckpt = AsyncCheckpointer(self.ckpt_root, keep_last=self.keep_last)
@@ -68,7 +80,11 @@ class FaultTolerantLoop:
             state = self.step_fn(state, batch, step)
             dt = clock() - t0
             reg.histogram("fault.step_s").observe(dt)
-            self.monitor.record_step({0: dt})
+            times = self.host_times_fn(dt) if self.host_times_fn else {0: dt}
+            flagged = self.monitor.record_step(times)
+            if flagged and self.on_straggler:
+                self._ckpt.wait()  # flush so the callback can safely resume
+                self.on_straggler(flagged)
             if (step + 1) % self.ckpt_every == 0 or step == n_steps - 1:
                 self._ckpt.save_async(step, state)
             if metrics_cb:

@@ -75,5 +75,19 @@ class StragglerMonitor:
         return to_swap
 
     def replace_host(self, host: int):
-        """Hot-spare swap completed: reset stats for the slot."""
-        self.hosts[host] = HostStats()
+        """Hot-spare swap completed (or the host left the fleet after a
+        shrink): forget the slot's stats entirely.
+
+        The entry is *dropped*, not zeroed: a ``HostStats(ewma_time=0.0)``
+        reset would (a) bias the fleet median low until the EWMA warms back
+        up — masking real stragglers for ~1/(1-ewma) steps — and (b) make
+        the swapped-in host's own EWMA climb from 0 instead of its first
+        real sample.  With the entry gone, :meth:`record_step`'s
+        ``setdefault`` re-seeds the EWMA from the first post-swap sample
+        (exactly how a brand-new host enters), and until that sample arrives
+        the host contributes nothing to the median.  The per-host EWMA gauge
+        is zeroed too, so dashboards don't keep showing the dead host's last
+        (slow) estimate.
+        """
+        self.hosts.pop(host, None)
+        get_registry().gauge(f"straggler.ewma_s.host{host}").set(0.0)

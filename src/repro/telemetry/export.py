@@ -69,7 +69,8 @@ def to_markdown(snap: Optional[Dict] = None,
 
 
 def serving_slos(registry: Optional[Registry] = None,
-                 attn_impl: Optional[str] = None) -> Dict:
+                 attn_impl: Optional[str] = None,
+                 n_hosts: Optional[int] = None) -> Dict:
     """The serving SLO trio as flat row fields (ms units, JSON-friendly).
 
     Pulled from the Server's canonical metric names; absent metrics yield
@@ -79,7 +80,10 @@ def serving_slos(registry: Optional[Registry] = None,
     ``attn_impl`` tags which decode-attention engine produced the numbers
     (pass :attr:`Server.attn_impl`); it rides along in the row so
     ``benchmarks/run.py --compare`` never diffs jnp-path SLOs against
-    kernel-path SLOs silently.
+    kernel-path SLOs silently.  ``n_hosts`` does the same for fleet runs:
+    pass the host count when ``registry`` is a merged fleet view
+    (:meth:`repro.telemetry.Registry.merge`), so single-host SLOs are never
+    compared against fleet SLOs under one key.
     """
     snap = snapshot(registry)
     hists, gauges = snap["histograms"], snap["gauges"]
@@ -94,6 +98,8 @@ def serving_slos(registry: Optional[Registry] = None,
             "occupancy_peak": round(occ["hwm"], 3) if occ else None}
     if attn_impl is not None:
         slos["attn_impl"] = attn_impl
+    if n_hosts is not None:
+        slos["n_hosts"] = n_hosts
     return slos
 
 

@@ -95,16 +95,19 @@ class Histogram:
                  "buckets", "count", "sum", "min", "max")
 
     def __init__(self, name: str, reg: "Registry", *, lo: float = 1e-6,
-                 hi: float = 1e3, per_decade: int = 9):
-        if lo <= 0 or hi <= lo:
+                 hi: float = 1e3, per_decade: int = 9,
+                 nbuckets: Optional[int] = None):
+        if lo <= 0 or (nbuckets is None and hi <= lo):
             raise ValueError(f"need 0 < lo < hi, got [{lo}, {hi}]")
         self.name = name
         self._reg = reg
         self.lo = lo
         self.per_decade = per_decade
         self._log_lo = math.log10(lo)
-        decades = math.log10(hi) - self._log_lo
-        self._nbuckets = max(1, math.ceil(decades * per_decade))
+        if nbuckets is None:  # explicit count: exact reconstruction on merge
+            decades = math.log10(hi) - self._log_lo
+            nbuckets = max(1, math.ceil(decades * per_decade))
+        self._nbuckets = nbuckets
         self.zero()
 
     def zero(self) -> None:
@@ -161,7 +164,13 @@ class Histogram:
                 "mean": self.sum / self.count,
                 "min": self.min, "max": self.max,
                 "p50": self.percentile(50), "p95": self.percentile(95),
-                "p99": self.percentile(99)}
+                "p99": self.percentile(99),
+                # bucket state rides along (sparse, JSON-keyed) so fleet
+                # merges are EXACT: addition of bucket counts loses nothing.
+                "lo": self.lo, "per_decade": self.per_decade,
+                "nbuckets": self._nbuckets,
+                "buckets": {str(i): c for i, c in enumerate(self.buckets)
+                            if c}}
 
 
 class Registry:
@@ -214,6 +223,62 @@ class Registry:
         with self._lock:
             for m in self._metrics.values():
                 m.zero()
+
+    # --------------------------------------------------------------- merge
+    @classmethod
+    def merge(cls, *snapshots: Dict) -> "Registry":
+        """Rebuild ONE registry from many :meth:`snapshot` dicts (fleet view).
+
+        Merge semantics, chosen so a merged registry reads as-if every host
+        had fed a single registry:
+
+          * counters — sum (events are events on every host).
+          * gauges   — ``value`` sums (levels add across hosts: queue depths,
+            tokens/s), ``hwm`` takes the max (the worst single-host pressure;
+            a fleet-wide summed high-water would pin moments that never
+            co-occurred).
+          * histograms — **exact** bucket addition: every snapshot carries
+            its sparse bucket counts plus (lo, per_decade, nbuckets), so the
+            merged percentiles equal the percentiles of a single histogram
+            fed the concatenated samples.  Mismatched bucket layouts under
+            one name raise instead of silently blending.
+
+        Identity holds: ``Registry.merge(snap)`` snapshots back to ``snap``.
+        """
+        reg = cls()
+        for snap in snapshots:
+            for name, v in snap.get("counters", {}).items():
+                reg.counter(name).value += v
+            for name, g in snap.get("gauges", {}).items():
+                gauge = reg.gauge(name)
+                gauge.value += g["value"]
+                gauge.hwm = max(gauge.hwm, g["hwm"])
+            for name, h in snap.get("histograms", {}).items():
+                if not h.get("count"):
+                    reg.histogram(name)
+                    continue
+                hist = reg._get(name, Histogram, lo=h["lo"],
+                                per_decade=h["per_decade"],
+                                nbuckets=h["nbuckets"])
+                layout = (h["lo"], h["per_decade"], h["nbuckets"])
+                if hist.count == 0 and \
+                        (hist.lo, hist.per_decade, hist._nbuckets) != layout:
+                    # an earlier empty snapshot pinned the default layout;
+                    # the first populated one is authoritative
+                    hist = reg._metrics[name] = Histogram(
+                        name, reg, lo=h["lo"], per_decade=h["per_decade"],
+                        nbuckets=h["nbuckets"])
+                if (hist.lo, hist.per_decade, hist._nbuckets) != layout:
+                    raise ValueError(
+                        f"histogram {name!r}: bucket layout mismatch across "
+                        f"snapshots — cannot merge exactly")
+                for i, c in h["buckets"].items():
+                    hist.buckets[int(i)] += c
+                hist.count += h["count"]
+                hist.sum += h["sum"]
+                hist.min = min(hist.min, h["min"])
+                hist.max = max(hist.max, h["max"])
+        return reg
 
     # ------------------------------------------------------------ snapshot
     def snapshot(self) -> Dict[str, Dict]:

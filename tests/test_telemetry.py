@@ -168,6 +168,58 @@ def test_serving_slos_are_none_without_a_server():
     assert slos == {"ttft_ms": None, "tpot_ms": None, "occupancy_peak": None}
 
 
+# ----------------------------------------------------------- registry merge
+def test_merge_histogram_percentiles_are_exact_bucket_addition():
+    """Fleet percentiles must equal percentiles of the union of samples —
+    bucket counts add exactly; nothing is approximated at merge time."""
+    rng = np.random.default_rng(7)
+    samples = rng.uniform(1e-4, 5.0, size=240)
+    ref, parts = Registry(), [Registry() for _ in range(3)]
+    for i, v in enumerate(samples):
+        ref.histogram("step_s").observe(float(v))
+        parts[i % 3].histogram("step_s").observe(float(v))
+    merged = Registry.merge(*[p.snapshot() for p in parts])
+    m = merged.snapshot()["histograms"]["step_s"]
+    r = ref.snapshot()["histograms"]["step_s"]
+    assert m["count"] == r["count"] == 240
+    for q in ("p50", "p95", "p99"):
+        assert m[q] == r[q], f"{q}: merged {m[q]} != as-if-one {r[q]}"
+    assert m["min"] == r["min"] and m["max"] == r["max"]
+    assert m["mean"] == pytest.approx(r["mean"])
+    assert m["buckets"] == r["buckets"]
+
+
+def test_merge_counters_sum_and_gauge_high_water_is_max():
+    a, b = Registry(), Registry()
+    a.counter("served").inc(3)
+    b.counter("served").inc(5)
+    a.gauge("depth").set(4.0)
+    a.gauge("depth").set(1.0)  # a: value 1.0, hwm 4.0
+    b.gauge("depth").set(2.5)  # b: value 2.5, hwm 2.5
+    snap = Registry.merge(a.snapshot(), b.snapshot()).snapshot()
+    assert snap["counters"]["served"] == 8
+    assert snap["gauges"]["depth"] == {"value": 3.5, "hwm": 4.0}
+
+
+def test_merge_identity_under_single_snapshot():
+    reg = Registry()
+    reg.counter("c").inc(4)
+    reg.gauge("g").set(1.5)
+    for v in (0.001, 0.01, 0.1, 7.0):
+        reg.histogram("h").observe(v)
+    reg.histogram("empty")  # zero-count histograms survive the round trip
+    merged = Registry.merge(reg.snapshot())
+    assert merged.snapshot() == reg.snapshot()
+
+
+def test_merge_rejects_mismatched_histogram_layouts():
+    a, b = Registry(), Registry()
+    a.histogram("h").observe(0.5)
+    b.histogram("h", lo=1e-3, hi=10.0).observe(0.5)
+    with pytest.raises(ValueError, match="layout"):
+        Registry.merge(a.snapshot(), b.snapshot())
+
+
 # ------------------------------------------------- straggler true median
 def test_straggler_median_is_true_median():
     assert _median([0.1, 0.4]) == pytest.approx(0.25)
@@ -189,6 +241,36 @@ def test_straggler_flags_slow_host_in_even_fleets(times, slow):
     old_median = sorted(times.values())[len(times) // 2]
     assert times[slow] <= mon.cfg.threshold * old_median, \
         "test vector no longer distinguishes true median from upper-middle"
+
+
+def test_replace_host_drops_stats_and_reseeds_from_first_sample():
+    """Regression: replace_host used to reset to HostStats(ewma_time=0.0),
+    which (a) biased the fleet median low until the EWMA warmed back up and
+    (b) left the per-host EWMA gauge showing the dead host's last estimate.
+    The entry must be DROPPED: the swapped-in host re-seeds from its first
+    post-swap sample and the gauge reads 0 until then."""
+    mon = StragglerMonitor(cfg=StragglerConfig(threshold=1.5, patience=3))
+    times = {0: 0.1, 1: 0.1, 2: 0.12, 3: 0.5}
+    for _ in range(mon.cfg.patience + 2):
+        mon.record_step(dict(times))
+    assert mon.swaps == [3]
+    mon.replace_host(3)
+    assert 3 not in mon.hosts, "entry must be dropped, not zeroed"
+    assert get_registry().gauge("straggler.ewma_s.host3").value == 0.0
+    # until the spare reports, the median covers the survivors only — a
+    # zeroed entry would drag it to 0.055 and mask host 2 as a "straggler"
+    assert _median([s.ewma_time for s in mon.hosts.values()]) == \
+        pytest.approx(0.1)
+    # first post-swap sample seeds the EWMA at the sample itself, not at
+    # ewma * 0 + (1 - ewma) * sample
+    mon.record_step({**times, 3: 0.1})
+    st = mon.hosts[3]
+    assert st.ewma_time == pytest.approx(0.1)
+    assert st.strikes == 0 and not st.flagged
+    # a healthy replacement never re-flags (and nobody else does either)
+    for _ in range(mon.cfg.patience + 2):
+        mon.record_step({**times, 3: 0.1})
+    assert mon.swaps == [3]
 
 
 # ------------------------------------------- serving SLOs, end to end
