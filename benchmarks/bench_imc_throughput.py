@@ -81,6 +81,11 @@ def sim_path_throughput(smoke: bool = False):
     ``sim/pallas``    — the fully fused bitplane_mac kernel, interpret mode
                         on CPU (correctness oracle, not a perf number
                         off-TPU).
+    ``sim/pallas+noise`` — the noisy fast path: the same ONE-kernel pyramid
+                        with the NoiseSpec Monte-Carlo drawn by the in-kernel
+                        PRNG.  On TPU this row must meet or beat
+                        ``sim/jnp+noise``; on CPU both pallas rows are
+                        interpreter correctness numbers, not perf.
     """
     from repro.core.bitserial import bitserial_matmul_looped
     from repro.core.quant import quantize, to_offset_binary
@@ -128,6 +133,16 @@ def sim_path_throughput(smoke: bool = False):
                                           np.asarray(out_ker))
             rows.append(row(f"imc/{spec_p.label}_{m}x{k}x{n}", us_ker,
                             "interpret=True on CPU (oracle-mode; not perf)"))
+
+            spec_pn = FabricSpec(mode="sim", backend="pallas",
+                                 noise=NoiseSpec.calibrated())
+            fkn = jax.jit(lambda x, w, key, s=spec_pn: fabric_matmul(
+                x, w, s, key=key))
+            us_kn, _ = time_fn(fkn, x, w, key, iters=2, warmup=1)
+            rows.append(row(
+                f"imc/{spec_pn.label}_{m}x{k}x{n}", us_kn,
+                "in-kernel PRNG noise; interpret=True on CPU "
+                "(oracle-mode; not perf)"))
     return rows
 
 

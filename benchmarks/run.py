@@ -7,11 +7,14 @@ seeding the perf trajectory.  Roofline rows appear when dry-run records exist
 under experiments/dryrun/.
 
 ``--json [PATH]`` additionally runs the Engine-backed continuous-batching
-serve bench per (FabricSpec x KV geometry) — float / exact / sim / noisy-sim,
-each under the legacy fixed ring AND the paged block pool, plus one
+serve bench per (FabricSpec x KV geometry) — float / exact / sim / noisy-sim
+(both the keyed jnp engine and the in-kernel-PRNG ``sim/pallas+noise`` fast
+path), each under the legacy fixed ring AND the paged block pool, plus one
 ragged-admission paged row and paged-kernel (``attn_impl='pallas'``) siblings
 of the float paged rows — and writes rows (tokens/s, steady-state
 decode-step ms, attn_impl tag) to ``PATH`` (default ``BENCH_imc.json``).
+``--autotune`` first resolves the standard kernel-geometry cells through
+``repro.kernels.autotune`` (trial-free on the committed cache).
 
 ``--compare OLD NEW`` diffs two such JSON files (tokens/s, step ms, % delta)
 as a markdown table keyed by (spec, kv, mix, attn_impl) — jnp-path numbers
@@ -181,6 +184,12 @@ def serve_spec_rows(smoke: bool = True):
         (None, FabricSpec(bits_a=4, bits_w=4, mode="sim", backend="jnp")),
         (None, FabricSpec(bits_a=4, bits_w=4, mode="sim", backend="jnp",
                           noise=NoiseSpec(mismatch_sigma=0.05))),
+        # noisy Pallas fast path: the same NoiseSpec drawn by the in-kernel
+        # PRNG inside the fused bitplane_mac kernel (one pallas_call).  Off
+        # TPU this serves through the interpreter — a correctness row, not
+        # perf — and is tagged ``interpret: true`` below.
+        (None, FabricSpec(bits_a=4, bits_w=4, mode="sim", backend="pallas",
+                          noise=NoiseSpec(mismatch_sigma=0.05))),
     ]
     n_req, max_new = (4, 6) if smoke else (8, 16)
     uniform = [16] * n_req
@@ -200,6 +209,9 @@ def serve_spec_rows(smoke: bool = True):
         cfg = dataclasses.replace(cfg0, fabric=spec, imc_mode="off")
         row = _serve_once(cfg, params, lens, max_new, kv,
                          attn_impl=attn_impl)
+        if (spec is not None and spec.backend == "pallas"
+                and jax.default_backend() != "tpu"):
+            row["interpret"] = True  # fabric kernel ran in the interpreter
         rows.append({"spec": label or spec.label, "kv": kv, "mix": mix,
                      "arch": cfg0.name, **row})
     # virtual-fleet sibling of the float paged uniform row: same traffic
@@ -216,21 +228,34 @@ def serve_spec_rows(smoke: bool = True):
 def compare(old_path: str, new_path: str) -> None:
     """Diff two BENCH_imc.json runs row-by-row (markdown table to stdout).
 
-    Rows are keyed by (spec, kv, mix, attn_impl, n_hosts) — a jnp-path row
-    is never diffed against a kernel-path row, and a single-host row is
-    never diffed against a fleet row.  Files predating the ``attn_impl`` /
-    ``n_hosts`` tags default to what they actually ran: ``ring`` geometry or
-    the jnp gather path, and one host.
+    Rows are keyed by (spec, noise_engine, kv, mix, attn_impl, n_hosts) — a
+    jnp-path row is never diffed against a kernel-path row, a noisy row
+    drawn by the in-kernel PRNG (``sim/pallas+noise``) is never diffed
+    against one drawn by the keyed jnp engine (``sim/jnp+noise``), and a
+    single-host row is never diffed against a fleet row.  Files predating
+    the ``attn_impl`` / ``n_hosts`` tags default to what they actually ran:
+    ``ring`` geometry or the jnp gather path, and one host.
     """
     def impl_of(r):
         kv = r.get("kv", "ring")
         return r.get("attn_impl", "ring" if kv == "ring" else "jnp")
 
+    def noise_of(r):
+        # the noise ENGINE is the backend half of a noisy spec label
+        # ("sim/jnp+noise" -> "jnp", "sim/pallas+noise" -> "pallas");
+        # noise-free rows key as "-" so they only ever diff against each
+        # other.
+        label = r.get("spec", "")
+        if "+noise" not in label:
+            return "-"
+        return label.split("/", 1)[-1].split("+", 1)[0]
+
     def load(p):
         with open(p) as f:
             rec = json.load(f)
-        return {(r["spec"], r.get("kv", "ring"), r.get("mix", "uniform"),
-                 impl_of(r), r.get("n_hosts", 1) or 1): r
+        return {(r["spec"], noise_of(r), r.get("kv", "ring"),
+                 r.get("mix", "uniform"), impl_of(r),
+                 r.get("n_hosts", 1) or 1): r
                 for r in rec["rows"]}
 
     def pct(old, new):
@@ -239,16 +264,16 @@ def compare(old_path: str, new_path: str) -> None:
         return f"{100.0 * (new - old) / old:+.1f}%"
 
     old, new = load(old_path), load(new_path)
-    print("| spec | kv | mix | attn | hosts | tok/s old | tok/s new | Δ | "
-          "step ms old | step ms new | Δ | ttft ms old | ttft ms new | Δ | "
-          "tpot ms old | tpot ms new | Δ |")
+    print("| spec | noise | kv | mix | attn | hosts | tok/s old | tok/s new "
+          "| Δ | step ms old | step ms new | Δ | ttft ms old | ttft ms new "
+          "| Δ | tpot ms old | tpot ms new | Δ |")
     print("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
-          "---|---|")
+          "---|---|---|")
     for key in sorted(set(old) | set(new)):
         o, n = old.get(key, {}), new.get(key, {})
-        attn = key[3] + (" (interpret)" if (o.get("interpret")
+        attn = key[4] + (" (interpret)" if (o.get("interpret")
                                             or n.get("interpret")) else "")
-        cells = [key[0], key[1], key[2], attn, key[4]]
+        cells = [key[0], key[1], key[2], key[3], attn, key[5]]
         for field in ("tokens_per_s", "step_ms", "ttft_ms", "tpot_ms"):
             ov, nv = o.get(field), n.get(field)
             cells += [ov if ov is not None else "—",
@@ -269,11 +294,23 @@ def main(argv=None) -> None:
     ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"), default=None,
                     help="diff two BENCH_imc.json runs (tokens/s, step ms, "
                          "%% delta) as a markdown table; runs nothing else")
+    ap.add_argument("--autotune", action="store_true",
+                    help="(re-)tune the standard kernel cells before "
+                         "benching; cached cells resolve trial-free, so on "
+                         "a warm cache this is a no-op assertion")
     args = ap.parse_args(argv)
 
     if args.compare:
         compare(*args.compare)
         return
+
+    if args.autotune:
+        from repro.kernels import autotune
+        for kernel, bucket, geom, backend in autotune.tune_standard(
+                smoke=args.smoke):
+            print(f"autotune/{kernel}/{bucket}/{backend},"
+                  f"{' '.join(f'{k}={v}' for k, v in sorted(geom.items()))}",
+                  flush=True)
 
     from benchmarks import (bench_decode_attn, bench_imc_throughput,
                             bench_paper_tables, roofline)

@@ -29,9 +29,13 @@ The :class:`Fabric` facade bundles the four things you do with a macro:
     rep = fab.cost(x.shape, w.shape)         # energy/latency FabricReport
 
 Backend resolution happens in a small registry keyed by
-``(mode, backend, noisy)``; unsupported combinations (e.g. the fused Pallas
-kernel has no noise support) raise immediately at spec/facade construction
-instead of silently falling back.
+``(mode, backend, noisy)``; unsupported combinations raise immediately at
+spec/facade construction instead of silently falling back.  Noisy sims are
+first-class on BOTH engines: the jnp keyed path is the statistical oracle,
+and ``backend="pallas"`` runs the whole noisy pyramid as one fused kernel
+with in-kernel PRNG (``kernels/bitplane_mac``) — same key -> identical
+outputs, cross-engine agreement pinned on moments/quantiles (different PRNG
+streams make bit-identity impossible).
 """
 from __future__ import annotations
 
@@ -119,10 +123,6 @@ class FabricSpec:
             raise ValueError(
                 "noise is only meaningful on the analog sim path; use "
                 "mode='sim' (exact mode is the noise-free digital equivalent)")
-        if self.noisy and self.backend == "pallas":
-            raise ValueError(
-                "noisy sim is not supported on the fused Pallas kernel; use "
-                "backend='jnp' (or 'auto') for PRNG-keyed noise")
 
     # -------------------------------------------------------------- derived
     @property
@@ -142,7 +142,7 @@ class FabricSpec:
         """Concrete engine name: 'auto' -> pallas on TPU, jnp elsewhere."""
         if self.backend != "auto":
             return self.backend
-        if not self.noisy and jax.default_backend() == "tpu":
+        if jax.default_backend() == "tpu":
             return "pallas"
         return "jnp"
 
@@ -238,23 +238,51 @@ def _sim_pallas(qa, qw, spec, key):
     return uu - corr
 
 
-# ------------------------------------------------------------------ matmul
-@partial(jax.jit, static_argnames=("spec",))
-def fabric_matmul(x, w, spec: FabricSpec = FabricSpec(), *, key=None):
-    """y[..., N] ~= x[..., K] @ w[K, N] through the fabric described by spec.
+@register_engine("sim", "pallas", True)
+def _sim_pallas_noisy(qa, qw, spec, key):
+    from repro.kernels.bitplane_mac.ops import bitplane_mac_noisy
 
-    Activations quantize per-tensor (dynamic) at ``bits_a``; weights per
-    output channel at ``bits_w``.  ``key`` is required iff ``spec.noisy``.
-    The spec is the ONLY static argument: equal specs share one jit entry.
-    """
-    if spec.noisy and key is None:
-        raise ValueError(f"spec {spec.label} is noisy: pass key=")
+    u_a, u_w, corr = _sim_correction(qa, qw, spec)
+    uu = bitplane_mac_noisy(
+        u_a, u_w, key, bits_a=spec.bits_a, bits_w=spec.bits_w,
+        rows=spec.rows, mismatch_sigma=spec.noise.mismatch_sigma,
+        comparator_offset_sigma=spec.noise.comparator_offset_sigma)
+    return uu - corr
+
+
+# ------------------------------------------------------------------ matmul
+@partial(jax.jit, static_argnames=("spec", "geom"))
+def _fabric_matmul_jit(x, w, spec: FabricSpec, key, geom):
+    del geom  # cache-key only: retrace when tuned kernel geometry changes
     engine = resolve_engine(spec)
     qx = quantize(x, spec.bits_a, axis=None)
     qw = quantize(w, spec.bits_w, axis=0)  # per-column (output channel)
     acc = engine(qx.q, qw.q, spec, key)
     return acc.astype(jnp.float32) * qx.scale * qw.scale.reshape(
         (1,) * (acc.ndim - 1) + (-1,))
+
+
+def fabric_matmul(x, w, spec: FabricSpec = FabricSpec(), *, key=None):
+    """y[..., N] ~= x[..., K] @ w[K, N] through the fabric described by spec.
+
+    Activations quantize per-tensor (dynamic) at ``bits_a``; weights per
+    output channel at ``bits_w``.  ``key`` is required iff ``spec.noisy``.
+
+    Plain wrapper over one inner jit whose static arguments are the spec and
+    the autotuner's :func:`~repro.kernels.autotune.geometry_token` — equal
+    specs under an unchanged tuning state share one compiled executable, and
+    a re-tune (or a ``REPRO_TUNE_*`` pin change) busts the cache instead of
+    silently reusing stale tile geometry.
+    """
+    from repro.kernels import autotune
+
+    if spec.noisy and key is None:
+        raise ValueError(f"spec {spec.label} is noisy: pass key=")
+    return _fabric_matmul_jit(x, w, spec, key, autotune.geometry_token())
+
+
+# the recompile-detector tests watch the inner jit's cache through the wrapper
+fabric_matmul._cache_size = _fabric_matmul_jit._cache_size
 
 
 # ------------------------------------------------------------------ facade

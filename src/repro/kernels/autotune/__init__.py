@@ -1,0 +1,18 @@
+"""Kernel autotuner: measured, cached Pallas tile geometry.
+
+See :mod:`repro.kernels.autotune.tuner` for the design.  The committed
+``tuned.json`` beside this file is the CI-deterministic cache; point
+``REPRO_AUTOTUNE_CACHE`` elsewhere to tune without touching it, and pin a
+kernel's geometry outright with ``REPRO_TUNE_<KERNEL>="bm=64,bn=64,bk=128"``.
+"""
+from repro.kernels.autotune.tuner import (DEFAULTS, SPACES, AutotuneCache,
+                                          backend_key, default_cache_path,
+                                          env_pins, geometry_token, get_cache,
+                                          lookup, set_cache, shape_bucket,
+                                          tune, tune_standard)
+
+__all__ = [
+    "DEFAULTS", "SPACES", "AutotuneCache", "backend_key",
+    "default_cache_path", "env_pins", "geometry_token", "get_cache",
+    "lookup", "set_cache", "shape_bucket", "tune", "tune_standard",
+]

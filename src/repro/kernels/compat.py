@@ -1,4 +1,4 @@
-"""Version-compat shims for Pallas TPU API drift.
+"""Version-compat shims for Pallas TPU API drift + kernel capability probing.
 
 The Pallas TPU namespace renamed several symbols across jax releases
 (``TPUCompilerParams`` -> ``CompilerParams``, and the older
@@ -13,16 +13,26 @@ Resolved at import time (cheap, and failures surface immediately):
     dropping kwargs the installed class does not know about (forward/backward
     tolerant).
 
-Plus the interpret-mode policy every kernel wrapper shares:
+Plus the ONE capability helper every kernel wrapper queries
+(:func:`kernel_caps`), consolidating two orthogonal detections:
 
-  * :func:`default_interpret` / :func:`resolve_interpret` — off-TPU backends
-    run ``pallas_call(interpret=True)``, which is how CPU CI exercises every
-    kernel (flash_attn, paged_attn, bitplane_mac) on each PR instead of only
-    on TPU hardware.
+  * **interpret** — off-TPU backends run ``pallas_call(interpret=True)``,
+    which is how CPU CI exercises every kernel (flash_attn, paged_attn,
+    bitplane_mac, imc_mac, rbl_decode) on each PR instead of only on TPU.
+  * **prng**      — whether an in-kernel PRNG is usable for the noisy
+    kernels.  The interpreter has NO lowering for the Mosaic hardware PRNG
+    (``pltpu.prng_seed`` raises ``NotImplementedError`` on CPU), so
+    interpret-mode kernels fall back to a stateless counter-hash PRNG
+    (:func:`repro.kernels.common.make_normal_sampler`) which runs anywhere;
+    the compiled TPU path requires the ``pltpu.prng_seed`` /
+    ``prng_random_bits`` primitives.  ``prng=False`` therefore only happens
+    on a compiled-TPU build of jax too old to expose them — the one case
+    where a noisy kernel wrapper must warn and fall back to the jnp engine.
 """
 from __future__ import annotations
 
 import inspect
+from dataclasses import dataclass
 
 import jax
 from jax.experimental.pallas import tpu as pltpu
@@ -40,6 +50,10 @@ else:  # pragma: no cover - ancient jax; kernels would not work anyway
 
 _ACCEPTED = frozenset(inspect.signature(CompilerParams).parameters)
 
+# Mosaic hardware PRNG primitives (the compiled-TPU noisy fast path).
+HAS_TPU_PRNG = (hasattr(pltpu, "prng_seed")
+                and hasattr(pltpu, "prng_random_bits"))
+
 
 def compiler_params(**kw):
     """``CompilerParams(**kw)`` with unknown kwargs silently dropped.
@@ -48,6 +62,32 @@ def compiler_params(**kw):
     installed jax supports takes effect.
     """
     return CompilerParams(**{k: v for k, v in kw.items() if k in _ACCEPTED})
+
+
+@dataclass(frozen=True)
+class KernelCaps:
+    """What the resolved execution mode of a kernel can do.
+
+    interpret — this call runs through the Pallas interpreter.
+    prng      — an in-kernel PRNG is available for noisy kernels: always in
+                interpret mode (counter-hash fallback), and in compiled mode
+                iff the installed jax exposes the Mosaic PRNG primitives.
+    """
+
+    interpret: bool
+    prng: bool
+
+
+def kernel_caps(interpret: bool | None = None) -> KernelCaps:
+    """Resolve one kernel call's capabilities (the five ops.py entry points).
+
+    ``interpret=None`` defers to :func:`default_interpret`; an explicit bool
+    wins.  PRNG capability is derived from the SAME resolution, so interpret
+    detection and PRNG detection can never disagree about which engine a
+    noisy call actually runs on.
+    """
+    it = default_interpret() if interpret is None else interpret
+    return KernelCaps(interpret=it, prng=it or HAS_TPU_PRNG)
 
 
 def default_interpret() -> bool:
@@ -59,4 +99,4 @@ def default_interpret() -> bool:
 def resolve_interpret(interpret: bool | None) -> bool:
     """The ``interpret=None`` convention shared by all kernel ``ops`` wrappers:
     ``None`` defers to :func:`default_interpret`, an explicit bool wins."""
-    return default_interpret() if interpret is None else interpret
+    return kernel_caps(interpret).interpret

@@ -13,7 +13,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.compat import resolve_interpret
+from repro.kernels import autotune
+from repro.kernels.compat import kernel_caps
 from repro.kernels.paged_attn.paged_attn import paged_flash_decode_raw
 from repro.kernels.paged_attn.ref import paged_decode_ref
 
@@ -22,6 +23,7 @@ ATTN_IMPLS = ("jnp", "pallas")
 
 def paged_attention(q, k_pool, v_pool, block_table, pos, *, k_scale=None,
                     v_scale=None, window: int = 0, impl: str = "jnp",
+                    blocks_per_step: int | None = None,
                     interpret: bool | None = None):
     """Paged decode attention against shared pools (post-scatter).
 
@@ -29,7 +31,9 @@ def paged_attention(q, k_pool, v_pool, block_table, pos, *, k_scale=None,
     (NB, bs, KV) scale pools; block_table: (B, MB) int32 dense prefixes with
     ``-1`` sentinels; pos: (B,) int32 current positions.  ``interpret=None``
     defers to :func:`repro.kernels.compat.default_interpret` (Pallas
-    interpreter off-TPU).  Returns (B, 1, H, hd) in q.dtype.
+    interpreter off-TPU).  ``blocks_per_step=None`` takes the autotuner's
+    cached winner for this shape bucket (pool panels DMA'd per grid step;
+    bit-identical across values).  Returns (B, 1, H, hd) in q.dtype.
     """
     if impl not in ATTN_IMPLS:
         raise ValueError(f"impl must be one of {ATTN_IMPLS}, got {impl!r}")
@@ -40,10 +44,18 @@ def paged_attention(q, k_pool, v_pool, block_table, pos, *, k_scale=None,
     b, sq, h, hd = q.shape
     assert sq == 1, "paged flash decode is single-token"
     kv = k_pool.shape[2]
+    caps = kernel_caps(interpret)
+    if blocks_per_step is None:
+        blocks_per_step = autotune.lookup(
+            "paged_attn",
+            {"b": b, "kv": kv, "rep": h // kv, "hd": hd,
+             "bs": k_pool.shape[1], "mb": block_table.shape[1]},
+            dtype="int8" if k_scale is not None else str(k_pool.dtype),
+            interpret=caps.interpret)["bps"]
     qg = q.reshape(b, kv, h // kv, hd)  # grouped heads, sq axis folded away
     out = paged_flash_decode_raw(
         qg, k_pool, v_pool, k_scale, v_scale,
         block_table.astype(jnp.int32), jnp.asarray(pos, jnp.int32),
-        scale=hd ** -0.5, window=window,
-        interpret=resolve_interpret(interpret))
+        scale=hd ** -0.5, window=window, blocks_per_step=blocks_per_step,
+        interpret=caps.interpret)
     return out.reshape(b, 1, h, hd)

@@ -9,12 +9,14 @@ Here attention reads the pools **directly** through the block table: the
 gathered K/V never exists in HBM, int8 blocks dequantize in-register, and
 sentinel (unallocated) table entries are skipped outright.
 
-Grid: ``(B, KV, MB)`` — slot x kv-head x table-block, the block axis
-innermost ("arbitrary", carries the online-softmax state).  The block table
-and per-slot positions ride in via **scalar prefetch**
-(:class:`pltpu.PrefetchScalarGridSpec`), so each step's BlockSpec index map
-resolves ``table[b, j]`` *before* the body runs and DMAs exactly one
-``(block_size, hd)`` K and V panel from the pool into VMEM.
+Grid: ``(B, KV, ceil(MB / bps))`` — slot x kv-head x table-block-group, the
+block axis innermost ("arbitrary", carries the online-softmax state).  The
+block table and per-slot positions ride in via **scalar prefetch**
+(:class:`pltpu.PrefetchScalarGridSpec`), so each step's BlockSpec index maps
+resolve ``table[b, j*bps+t]`` *before* the body runs and DMA ``bps``
+``(block_size, hd)`` K and V panels from the pool into VMEM —
+``bps = blocks_per_step`` (autotuned, default 1) panel fetches in flight per
+step, statically unrolled in the body.
 
 Per ``(b, h)`` the scratch carries flash-decode state across ``j`` blocks
 (the m/l/acc pattern of ``kernels/flash_attn``):
@@ -51,12 +53,17 @@ from repro.kernels.compat import compiler_params
 NEG_INF = -1e30
 
 
-def _make_kernel(bs: int, rep: int, scale: float, window: int, int8: bool):
-    def kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, *rest):
+def _make_kernel(bs: int, rep: int, scale: float, window: int, int8: bool,
+                 bps: int, mb: int):
+    def kernel(tbl_ref, pos_ref, q_ref, *rest):
+        k_refs = rest[0:bps]
+        v_refs = rest[bps:2 * bps]
+        idx = 2 * bps
         if int8:
-            ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
-        else:
-            o_ref, m_ref, l_ref, acc_ref = rest
+            ks_refs = rest[idx:idx + bps]
+            vs_refs = rest[idx + bps:idx + 2 * bps]
+            idx += 2 * bps
+        o_ref, m_ref, l_ref, acc_ref = rest[idx:idx + 4]
         b = pl.program_id(0)
         j = pl.program_id(2)
 
@@ -67,39 +74,49 @@ def _make_kernel(bs: int, rep: int, scale: float, window: int, int8: bool):
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
         pos = pos_ref[b]
-        entry = tbl_ref[b, j]
-        base = j * bs
-        # A block contributes iff it is allocated (no -1 sentinel) and its
-        # span [base, base+bs) intersects the valid context (<= pos, and
-        # inside the sliding window when one is set).
-        live = (entry >= 0) & (base <= pos)
-        if window:
-            live &= base + bs > pos - window
-
-        @pl.when(live)
-        def _block():
-            q = q_ref[0, 0].astype(jnp.float32)       # (rep, hd)
-            k = k_ref[0, :, 0].astype(jnp.float32)    # (bs, hd)
-            v = v_ref[0, :, 0].astype(jnp.float32)
-            if int8:  # in-register dequant against the scale pools
-                k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
-                v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
-            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                    preferred_element_type=jnp.float32) * scale
-            ctx = base + jax.lax.broadcasted_iota(jnp.int32, (rep, bs), 1)
-            valid = ctx <= pos
+        # Static unroll over the bps table blocks this grid step owns: their
+        # panel DMAs were all issued by the pipeline (that is the point —
+        # multiple pool fetches in flight per step), the online-softmax
+        # update runs sequentially over the live ones.
+        for t in range(bps):
+            jj = j * bps + t
+            entry = tbl_ref[b, jnp.minimum(jj, mb - 1)]
+            base = jj * bs
+            # A block contributes iff it exists (tail guard for mb % bps),
+            # is allocated (no -1 sentinel), and its span [base, base+bs)
+            # intersects the valid context (<= pos, and inside the sliding
+            # window when one is set).
+            live = (jj < mb) & (entry >= 0) & (base <= pos)
             if window:
-                valid &= ctx > pos - window
-            s = jnp.where(valid, s, NEG_INF)
-            m_prev = m_ref[...]  # (rep, 1)
-            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-            alpha = jnp.exp(m_prev - m_new)
-            p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
-            l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
-            acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
-                p, v, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-            m_ref[...] = m_new
+                live &= base + bs > pos - window
+
+            @pl.when(live)
+            def _block(t=t, base=base):
+                q = q_ref[0, 0].astype(jnp.float32)            # (rep, hd)
+                k = k_refs[t][0, :, 0].astype(jnp.float32)     # (bs, hd)
+                v = v_refs[t][0, :, 0].astype(jnp.float32)
+                if int8:  # in-register dequant against the scale pools
+                    k = k * ks_refs[t][0, :, 0].astype(jnp.float32)[:, None]
+                    v = v * vs_refs[t][0, :, 0].astype(jnp.float32)[:, None]
+                s = jax.lax.dot_general(
+                    q, k, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32) * scale
+                ctx = base + jax.lax.broadcasted_iota(jnp.int32, (rep, bs), 1)
+                valid = ctx <= pos
+                if window:
+                    valid &= ctx > pos - window
+                s = jnp.where(valid, s, NEG_INF)
+                m_prev = m_ref[...]  # (rep, 1)
+                m_new = jnp.maximum(m_prev,
+                                    jnp.max(s, axis=1, keepdims=True))
+                alpha = jnp.exp(m_prev - m_new)
+                p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+                l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1,
+                                                          keepdims=True)
+                acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+                    p, v, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                m_ref[...] = m_new
 
         @pl.when(j == pl.num_programs(2) - 1)
         def _flush():
@@ -109,9 +126,11 @@ def _make_kernel(bs: int, rep: int, scale: float, window: int, int8: bool):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "window",
+                                             "blocks_per_step", "interpret"))
 def paged_flash_decode_raw(q, k_pool, v_pool, k_scale, v_scale, block_table,
                            pos, *, scale: float, window: int = 0,
+                           blocks_per_step: int = 1,
                            interpret: bool = False):
     """One-token flash decode against shared paged pools.
 
@@ -120,28 +139,43 @@ def paged_flash_decode_raw(q, k_pool, v_pool, k_scale, v_scale, block_table,
     block_table: (B, MB) int32, ``-1`` = unallocated; pos: (B,) int32 —
     position of the token being decoded (its K/V already written to the
     pool).  Returns (B, KV, rep, hd) in q.dtype.
+
+    ``blocks_per_step`` (autotuned; see :mod:`repro.kernels.autotune`) packs
+    that many consecutive table blocks into one grid step: each gets its own
+    input panel with its own index map, so the Pallas pipeline keeps
+    ``blocks_per_step`` pool-panel DMAs in flight (double-buffered at 2) per
+    step instead of strictly one.  Results are bit-identical across
+    ``blocks_per_step`` values — the online-softmax update order over blocks
+    is unchanged.
     """
     b, kv, rep, hd = q.shape
     bs = k_pool.shape[1]
     mb = block_table.shape[1]
     int8 = k_scale is not None
-    grid = (b, kv, mb)
+    bps = max(1, min(blocks_per_step, mb))
+    grid = (b, kv, pl.cdiv(mb, bps))
 
-    def blk(tbl_ref, pos_ref, bi, ji):
+    def blk(tbl_ref, bi, ji):
         # Unallocated entries clamp to block 0: the DMA still lands (the
-        # pipeline always fetches) but pl.when skips the compute.
-        return jnp.maximum(tbl_ref[bi, ji], 0)
+        # pipeline always fetches) but pl.when skips the compute.  The ji
+        # clamp guards the tail step when mb % bps != 0.
+        return jnp.maximum(tbl_ref[bi, jnp.minimum(ji, mb - 1)], 0)
 
-    q_spec = pl.BlockSpec((1, 1, rep, hd), lambda b_, h, j, t, p: (b_, h, 0, 0))
-    kv_spec = pl.BlockSpec((1, bs, 1, hd),
-                           lambda b_, h, j, t, p: (blk(t, p, b_, j), 0, h, 0))
-    in_specs = [q_spec, kv_spec, kv_spec]
-    inputs = [q, k_pool, v_pool]
+    def kv_map(t):
+        return lambda b_, h, j, tbl, p: (blk(tbl, b_, j * bps + t), 0, h, 0)
+
+    def sc_map(t):
+        return lambda b_, h, j, tbl, p: (blk(tbl, b_, j * bps + t), 0, h)
+
+    q_spec = pl.BlockSpec((1, 1, rep, hd),
+                          lambda b_, h, j, t, p: (b_, h, 0, 0))
+    kv_specs = [pl.BlockSpec((1, bs, 1, hd), kv_map(t)) for t in range(bps)]
+    in_specs = [q_spec] + kv_specs + kv_specs
+    inputs = [q] + [k_pool] * bps + [v_pool] * bps
     if int8:
-        sc_spec = pl.BlockSpec((1, bs, 1),
-                               lambda b_, h, j, t, p: (blk(t, p, b_, j), 0, h))
-        in_specs += [sc_spec, sc_spec]
-        inputs += [k_scale, v_scale]
+        sc_specs = [pl.BlockSpec((1, bs, 1), sc_map(t)) for t in range(bps)]
+        in_specs += sc_specs + sc_specs
+        inputs += [k_scale] * bps + [v_scale] * bps
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
@@ -155,7 +189,7 @@ def paged_flash_decode_raw(q, k_pool, v_pool, k_scale, v_scale, block_table,
         ],
     )
     return pl.pallas_call(
-        _make_kernel(bs, rep, scale, window, int8),
+        _make_kernel(bs, rep, scale, window, int8, bps, mb),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kv, rep, hd), q.dtype),
         compiler_params=compiler_params(

@@ -10,7 +10,8 @@ PRNG-key plumbing for noisy fabrics.  The Engine owns them once:
     resolve against the ambient mesh.
   * **compiled-step cache** — :meth:`train_step` / :meth:`prefill_step` /
     :meth:`decode_step` are memoized on ``(ModelConfig, kind, extras,
-    FabricSpec)``; equal configs return the *same* jitted callable, so a
+    FabricSpec, autotune geometry token)``; equal configs under an unchanged
+    kernel-tuning state return the *same* jitted callable, so a
     server admitting its 100th request or a trainer resuming from a
     checkpoint never re-traces.  :attr:`Engine.stats` counts cache hits,
     distinct compiles, and XLA traces (the recompile detector the serve
@@ -45,6 +46,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.kernels import autotune
 from repro.launch.compat import mesh_context
 from repro.launch.mesh import dp_axes, make_test_mesh, tp_axis
 from repro.launch.sharding import (partition_batch, partition_inputs,
@@ -155,7 +157,12 @@ class Engine:
 
     def _cached_step(self, cfg: ModelConfig, kind: str, extras: Tuple,
                      build: Callable[[], Callable]):
-        key = (cfg, kind, extras, cfg.imc_fabric)
+        # The autotuner's geometry token rides the key: a re-tune (or a
+        # REPRO_TUNE_* pin change) changes the tile geometry baked into the
+        # step's kernels, so the cached executable must not be reused.  The
+        # token is stable in steady state — zero retraces while nobody tunes.
+        key = (cfg, kind, extras, cfg.imc_fabric,
+               autotune.geometry_token())
         step = self._steps.get(key)
         if step is None:
             step = self._steps[key] = self._timed(build(), kind)

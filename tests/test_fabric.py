@@ -42,9 +42,9 @@ def test_spec_validation_raises():
     # noise is a sim-path concept
     with pytest.raises(ValueError, match="sim"):
         FabricSpec(mode="exact", noise=NoiseSpec.calibrated())
-    # the fused kernel has no noise support: raise early, never fall back
-    with pytest.raises(ValueError, match="[Pp]allas"):
-        FabricSpec(mode="sim", backend="pallas", noise=NoiseSpec.calibrated())
+    # noisy + pallas is a supported engine since the in-kernel PRNG landed
+    assert FabricSpec(mode="sim", backend="pallas",
+                      noise=NoiseSpec.calibrated()).label == "sim/pallas+noise"
     with pytest.raises(ValueError, match=">= 0"):
         NoiseSpec(mismatch_sigma=-0.1)
 
@@ -74,6 +74,8 @@ def test_resolve_engine_covers_all_valid_combos():
                  FabricSpec(mode="sim", backend="jnp"),
                  FabricSpec(mode="sim", backend="pallas"),
                  FabricSpec(mode="sim", backend="jnp",
+                            noise=NoiseSpec.calibrated()),
+                 FabricSpec(mode="sim", backend="pallas",
                             noise=NoiseSpec.calibrated())):
         assert callable(resolve_engine(spec))
         assert callable(Fabric(spec)._engine)
@@ -321,7 +323,8 @@ def test_spec_path_serves_former_legacy_shapes():
     np.testing.assert_array_equal(np.asarray(y),
                                   np.asarray(imc_matmul(x, w, noisy, key=key)))
     # the old use_kernel=True + noise combination silently fell back to jnp;
-    # the typed spec makes that explicit (pallas + noise raises at validation)
+    # the typed spec makes the engine explicit (and pallas + noise is now a
+    # real engine of its own, not a fallback)
     assert noisy.resolve_backend() == "jnp" and noisy.noisy
     assert FabricSpec(mode="sim", backend="pallas").resolve_backend() == \
         "pallas"

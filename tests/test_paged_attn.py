@@ -129,6 +129,34 @@ def test_kernel_single_and_full_tables():
         assert _err(ref, out) <= ATOL["f32"]
 
 
+@pytest.mark.parametrize("bps", [2, 3, 4, 8])
+def test_kernel_bit_identical_across_blocks_per_step(bps):
+    """The multi-block-per-grid-step variant packs bps pool-panel DMAs into
+    one step but walks blocks in the same order, so it must be BIT-identical
+    to bps=1 — on f32 pools, int8 pools, windows, and ragged tables (incl.
+    the mb % bps tail)."""
+    rng = np.random.default_rng(5)
+    B, H, KV, hd, bs, nb, mb = 3, 4, 2, 16, 8, 22, 7
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd)
+    pos = np.array([5, 30, 51])
+    tbl = _ragged(rng, pos, mb, nb, bs)
+    for kw in (dict(), dict(window=9)):
+        base = paged_attention(q, kp, vp, tbl, jnp.asarray(pos),
+                               impl="pallas", blocks_per_step=1, **kw)
+        out = paged_attention(q, kp, vp, tbl, jnp.asarray(pos),
+                              impl="pallas", blocks_per_step=bps, **kw)
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+    kq, ks = _kv_quant(kp)
+    vq, vs = _kv_quant(vp)
+    kw = dict(k_scale=ks, v_scale=vs)
+    base = paged_attention(q, kq, vq, tbl, jnp.asarray(pos), impl="pallas",
+                           blocks_per_step=1, **kw)
+    out = paged_attention(q, kq, vq, tbl, jnp.asarray(pos), impl="pallas",
+                          blocks_per_step=bps, **kw)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
 def test_op_rejects_unknown_impl():
     rng = np.random.default_rng(4)
     q = jnp.asarray(rng.standard_normal((1, 1, 2, 8)), jnp.float32)
